@@ -1,0 +1,51 @@
+"""Aggregator micro-benchmark: wall-time per aggregation call (stacked path
+and Pallas-kernel path) vs worker count and gradient dimension.
+
+This is the systems-side benchmark backing the paper's complexity table
+(Krum O(n^2 d), CM/RFA O(n d)) and the bucketing claim that shrinking the
+input set n -> n/s cuts aggregation cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Reporter
+from repro.core.aragg import RobustAggregator
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(reporter=None):
+    rep = reporter or Reporter("agg_microbench")
+    key = jax.random.PRNGKey(0)
+    for (W, d) in [(25, 100_352), (53, 100_352)]:
+        xs = jax.random.normal(key, (W, d), jnp.float32)
+        for agg, mixing in [("krum", "none"), ("cm", "none"), ("rfa", "none"),
+                            ("cclip", "none"), ("rfa", "bucketing")]:
+            kwargs = {"tau": 10.0} if agg == "cclip" else (
+                {"n_byzantine": W // 10} if agg == "krum" else {})
+            ra = RobustAggregator.from_spec(agg, mixing=mixing, s=2, **kwargs)
+            call = jax.jit(lambda x, k, _ra=ra: _ra(x, key=k))
+            us = _time(call, xs, key)
+            rep.add(f"core/{agg}+{mixing}/W={W}", us)
+        # kernel path (interpret mode on CPU — TPU-native on device)
+        rep.add(f"kernels/cm/W={W}", _time(ops.cm_aggregate, xs, iters=3))
+        rep.add(f"kernels/gram/W={W}", _time(ops.gram, xs, iters=3))
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Figure 2: aggregators x attacks grid on non-iid data (n=25, f=5), with and
+without bucketing, with worker momentum 0.9 (the paper's bottom rows).
+
+Expected: bucketing improves nearly every (aggregator, attack) cell; IPM and
+ALIE (variance-exploiting) are the hardest without mixing + momentum.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter, is_label_flip, make_byz, run_cell
+
+AGGS = ["krum", "cm", "rfa", "cclip"]
+ATTACKS = ["bf", "lf", "mimic", "ipm", "alie"]
+N, F = 25, 5
+
+
+def main(steps: int = 300, momentum: float = 0.9, reporter=None):
+    rep = reporter or Reporter("fig2")
+    for attack in ATTACKS:
+        for agg in AGGS:
+            for mixing in ("none", "bucketing"):
+                byz = make_byz(agg, mixing, 2, attack, N, F, momentum=momentum)
+                acc = run_cell(byz, n=N, f=F, noniid=True, steps=steps,
+                               label_flip=is_label_flip(attack))
+                rep.add(f"{attack}/{agg}/{mixing}", acc)
+    return rep
+
+
+if __name__ == "__main__":
+    main()

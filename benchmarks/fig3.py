@@ -1,0 +1,31 @@
+"""Figure 3: CCLIP under IPM on non-iid data — (a) s-sweep at f=5 on the
+n=53 cluster; (b) f-sweep at s=2.
+
+Expected: larger s converges better (s=2 already good); s=2 holds as f
+approaches 25% of n.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter, make_byz, run_cell
+
+N = 53
+
+
+def main(steps: int = 300, reporter=None):
+    rep = reporter or Reporter("fig3")
+    # (a) fixed f=5, sweep s (s=1 with mixing none == no resampling)
+    for s, mixing in [(0, "none"), (2, "bucketing"), (5, "bucketing")]:
+        byz = make_byz("cclip", mixing, max(s, 1), "ipm", N, 5, momentum=0.9)
+        acc = run_cell(byz, n=N, f=5, noniid=True, steps=steps)
+        rep.add(f"s_sweep/s={s}", acc)
+    # (b) fixed s=2, sweep f
+    for f in (3, 6, 12):
+        byz = make_byz("cclip", "bucketing", 2, "ipm", N, f, momentum=0.9)
+        acc = run_cell(byz, n=N, f=f, noniid=True, steps=steps)
+        rep.add(f"f_sweep/f={f}", acc)
+    return rep
+
+
+if __name__ == "__main__":
+    main()

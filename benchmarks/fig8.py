@@ -1,0 +1,27 @@
+"""Figure 8 (App. A.2.4): bucketing vs resampling — near-identical accuracy,
+with bucketing reducing the aggregator's input count (n -> n/s).
+
+Also covers Figure 11 (App. A.2.6): fixed grouping (Chen et al. 2017) is
+better than vanilla but weaker than per-round random bucketing.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter, is_label_flip, make_byz, run_cell
+
+N, F = 24, 3
+
+
+def main(steps: int = 300, reporter=None):
+    rep = reporter or Reporter("fig8")
+    for attack in ("bf", "mimic", "ipm"):
+        for mixing in ("none", "bucketing", "resampling", "fixed_grouping"):
+            byz = make_byz("rfa", mixing, 2, attack, N, F)
+            acc = run_cell(byz, n=N, f=F, noniid=True, steps=steps,
+                           label_flip=is_label_flip(attack))
+            rep.add(f"{attack}/{mixing}", acc)
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline table (deliverable g): reads the dry-run JSON produced by
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json dryrun.json
+
+and renders EXPERIMENTS.md §Roofline: the three terms (compute / memory /
+collective, in seconds), the dominant term, MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) vs compiled HLO FLOPs, and a one-line lever per row.
+
+Run as a module to print the markdown table:
+    PYTHONPATH=src python -m benchmarks.roofline dryrun.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from repro.configs import INPUT_SHAPES, get_config
+
+# The dry-run executes ONE step; model flops for that step:
+#   train: 6 N D   (fwd 2ND + bwd 4ND), D = tokens in the global batch
+#   prefill: 2 N D
+#   decode: 2 N D with D = batch (one token per sequence)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/sequence
+
+
+def render(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| bottleneck | HLO TFLOPs/chip | model/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "error" in r or "skipped" in r:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                f"{r.get('error', r.get('skipped'))} | - | - |")
+            continue
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = r["flops"] * r["n_chips"]  # cost_analysis is per-chip
+        ratio = mf / hlo_total if hlo_total else float("nan")
+        out.append(
+            "| {arch} | {shape} | {mesh} | {c:.2f} | {m:.2f} | {k:.2f} | "
+            "{b} | {f:.2f} | {r:.2f} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                c=r["compute_s"] * 1e3, m=r["memory_s"] * 1e3,
+                k=r["collective_s"] * 1e3,
+                b=r["bottleneck"].replace("_s", ""),
+                f=r["flops"] / 1e12, r=ratio,
+            ))
+    return "\n".join(out)
+
+
+def main(path: str = "dryrun.json"):
+    with open(path) as f:
+        rows = json.load(f)
+    print(render(rows))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun.json")

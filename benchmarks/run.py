@@ -1,0 +1,81 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--steps N] [--only name ...]
+                                            [--csv out.csv]
+
+Prints ``benchmark,cell,value`` CSV rows (top-1 test accuracy per cell, or
+us/call for the microbench) plus per-benchmark wall time. Paper-scale
+settings are documented in each module; the default --steps 300 keeps the
+full sweep CPU-tractable while preserving every directional claim.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+
+from benchmarks import (
+    acclip,
+    agg_microbench,
+    fig2,
+    fig3,
+    fig8,
+    krum_selection,
+    overparam,
+    table1,
+    table2,
+    table3_4,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--csv", type=str, default=None)
+    args = ap.parse_args()
+
+    jobs = {
+        "table1": lambda: table1.main(steps=args.steps),
+        "table2": lambda: table2.main(steps=args.steps),
+        "table3_4": lambda: table3_4.main(steps=args.steps),
+        "fig2": lambda: fig2.main(steps=args.steps),
+        "fig3": lambda: fig3.main(steps=args.steps),
+        "fig8": lambda: fig8.main(steps=args.steps),
+        "overparam": lambda: overparam.main(steps=args.steps),
+        "krum_selection": lambda: krum_selection.main(steps=args.steps // 2),
+        "acclip": lambda: acclip.main(steps=args.steps),
+        "agg_microbench": agg_microbench.main,
+    }
+    selected = args.only or list(jobs)
+    unknown = set(selected) - set(jobs)
+    if unknown:
+        ap.error(f"unknown benchmarks {sorted(unknown)}; have {sorted(jobs)}")
+
+    all_rows = []
+    for name in selected:
+        print(f"== {name} ==", flush=True)
+        t0 = time.time()
+        out = jobs[name]()
+        reps = out if isinstance(out, tuple) else (out,)
+        for rep in reps:
+            all_rows.extend(rep.rows)
+        print(f"-- {name} done in {time.time() - t0:.0f}s", flush=True)
+
+    print("\nbenchmark,cell,value")
+    for r in all_rows:
+        print(f"{r['benchmark']},{r['cell']},{r['value']:.4f}")
+
+    if args.csv:
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=["benchmark", "cell", "value"])
+            w.writeheader()
+            for r in all_rows:
+                w.writerow({k: r[k] for k in ("benchmark", "cell", "value")})
+        print(f"wrote {args.csv}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Sweep the attack x defense matrix and print who wins.
+
+A compact version of the paper's Figure 2 grid through the public API —
+useful as a template for evaluating a new aggregator or a new attack against
+the existing zoo.
+
+    PYTHONPATH=src python examples/attack_defense_matrix.py --steps 150
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ByzConfig
+from repro.data.partition import worker_datasets
+from repro.data.synthetic import make_train_test
+from repro.models.mlp import accuracy, init_mlp, nll_loss
+from repro.training.byzantine import ByzantineSim
+
+N, F = 15, 3
+
+
+def run(attack, agg, mixing, task, steps):
+    X, Y, Xt, Yt = task
+    wx, wy = worker_datasets(X, Y, n_good=N - F, n_byz=F, noniid=True)
+    kwargs = (("n", N), ("f", F)) if attack == "alie" else ()
+    byz = ByzConfig(aggregator=agg, mixing=mixing, s=2, worker_momentum=0.9,
+                    attack=attack, attack_kwargs=kwargs, n_byzantine=F,
+                    delta=F / N)
+    sim = ByzantineSim(loss_fn=nll_loss, byz=byz, n_workers=N, n_byzantine=F,
+                       lr=1.0, batch_size=32)
+    params = init_mlp(jax.random.PRNGKey(1))
+    Xt, Yt = jnp.asarray(Xt), jnp.asarray(Yt)
+    _, hist = sim.run(params, jnp.asarray(wx), jnp.asarray(wy), steps,
+                      jax.random.PRNGKey(2),
+                      eval_fn=lambda p: accuracy(p, Xt, Yt), eval_every=steps)
+    return hist["eval"][-1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+
+    task = make_train_test(jax.random.PRNGKey(0), n_train=3000)
+    attacks = ["none", "bitflip", "mimic", "ipm", "alie"]
+    defenses = [("mean", "none"), ("rfa", "none"), ("rfa", "bucketing"),
+                ("cclip", "bucketing")]
+
+    header = "attack".ljust(10) + "".join(
+        f"{a}+{m}".ljust(18) for a, m in defenses)
+    print(header)
+    for attack in attacks:
+        row = attack.ljust(10)
+        for agg, mixing in defenses:
+            acc = run(attack, agg, mixing, task, args.steps)
+            row += f"{acc:.3f}".ljust(18)
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

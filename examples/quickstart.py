@@ -1,0 +1,56 @@
+"""Quickstart: Byzantine-robust training in ~40 lines.
+
+Trains the paper's MLP on the heterogeneous SynthMNIST task with 25 workers,
+5 of them running the mimic attack, defended by RFA + bucketing (s=2) +
+worker momentum — the paper's recommended recipe (Algorithm 1 + 2).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ByzConfig
+from repro.data.partition import worker_datasets
+from repro.data.synthetic import make_train_test
+from repro.models.mlp import accuracy, init_mlp, nll_loss
+from repro.training.byzantine import ByzantineSim
+
+
+def main():
+    n_workers, n_byzantine = 25, 5
+
+    # 1. a heterogeneous federated dataset: sort-by-label non-iid split
+    X, Y, Xt, Yt = make_train_test(jax.random.PRNGKey(0), n_train=4000)
+    wx, wy = worker_datasets(X, Y, n_good=n_workers - n_byzantine,
+                             n_byz=n_byzantine, noniid=True)
+
+    # 2. the paper's technique as a config: bucketing + robust agg + momentum
+    byz = ByzConfig(
+        aggregator="rfa",        # geometric median (Weiszfeld)
+        mixing="bucketing",      # Algorithm 1, camera-ready variant
+        s=2,                     # paper's recommended mild mixing
+        worker_momentum=0.9,     # Algorithm 2
+        attack="mimic",          # what the Byzantine workers do
+        n_byzantine=n_byzantine,
+        delta=n_byzantine / n_workers,
+    )
+
+    # 3. train
+    sim = ByzantineSim(loss_fn=nll_loss, byz=byz, n_workers=n_workers,
+                       n_byzantine=n_byzantine, lr=1.0, batch_size=32)
+    params = init_mlp(jax.random.PRNGKey(1))
+    Xt, Yt = jnp.asarray(Xt), jnp.asarray(Yt)
+    state, hist = sim.run(params, jnp.asarray(wx), jnp.asarray(wy),
+                          n_steps=300, key=jax.random.PRNGKey(2),
+                          eval_fn=lambda p: accuracy(p, Xt, Yt),
+                          eval_every=50)
+
+    for step, acc in zip(hist["step"], hist["eval"]):
+        print(f"step {step:4d}  test accuracy {acc:.3f}")
+    assert hist["eval"][-1] > 0.7, "defense failed!"
+    print("defended against the mimic attack.")
+
+
+if __name__ == "__main__":
+    main()

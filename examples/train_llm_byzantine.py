@@ -1,0 +1,96 @@
+"""End-to-end driver: Byzantine-robust training of a ~100M-param LLM.
+
+Uses the framework's full distributed stack — the generic pattern-scanned
+transformer (here the mamba2-130m assigned architecture at its real size,
+or any --arch), the distributed train step with robust gradient sync
+replacing the mean all-reduce, worker momentum, checkpointing, and the
+synthetic heterogeneous token pipeline (per-worker bigram "dialects").
+
+Runs a few hundred steps on whatever devices exist (CPU: pass --preset cpu
+for a reduced model; the same script drives the TPU mesh unchanged).
+
+    PYTHONPATH=src python examples/train_llm_byzantine.py --steps 200 --preset cpu
+    PYTHONPATH=src python examples/train_llm_byzantine.py --arch mamba2-130m  # full 130M
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ByzConfig
+from repro.data.synthetic import make_token_stream
+from repro.distributed.steps import make_train_step
+from repro.launch.mesh import make_host_mesh, n_workers
+from repro.models import transformer as tfm
+from repro.optim import make_optimizer
+from repro.training.checkpoint import save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--preset", choices=["cpu", "full"], default="cpu")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--agg", default="rfa")
+    ap.add_argument("--mixing", default="bucketing")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.preset == "cpu" else get_config(args.arch)
+    if args.preset == "full":
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    mesh = make_host_mesh(1, 1)  # swap for make_production_mesh() on TPU
+    W = n_workers(mesh)
+    byz = ByzConfig(aggregator=args.agg, mixing=args.mixing, s=2,
+                    worker_momentum=0.9, delta=0.1)
+
+    print(f"arch={cfg.name} params={cfg.param_count():,} workers={W} "
+          f"agg={args.agg}+{args.mixing}")
+
+    with mesh:
+        step_fn, sh = make_train_step(cfg, byz, mesh, lr=args.lr,
+                                      optimizer="adamw")
+        step_fn = jax.jit(step_fn)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        opt_init, _ = make_optimizer("adamw", lr=args.lr)
+        opt_state = opt_init(params)
+        worker_m = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((W,) + x.shape, jnp.float32), params
+        ) if sh["worker_m"] else {}
+
+        # heterogeneous per-worker token streams (non-iid "dialects")
+        streams = make_token_stream(jax.random.PRNGKey(1), n_workers=W,
+                                    seq_len=args.seq_len,
+                                    n_seqs_per_worker=64,
+                                    vocab=cfg.vocab_size)
+
+        t0 = time.time()
+        for t in range(args.steps):
+            k = jax.random.fold_in(jax.random.PRNGKey(2), t)
+            idx = jax.random.randint(k, (W, args.batch // W), 0,
+                                     streams.shape[1])
+            seqs = jnp.take_along_axis(streams, idx[..., None], axis=1)
+            seqs = seqs.reshape(args.batch, -1)
+            batch = {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+            params, opt_state, worker_m, metrics = step_fn(
+                params, opt_state, worker_m, k, batch)
+            if t % 20 == 0 or t == args.steps - 1:
+                print(f"step {t:5d}  loss {float(metrics['loss']):.4f}  "
+                      f"({time.time() - t0:.0f}s)")
+
+        path = save_checkpoint(args.ckpt_dir, args.steps,
+                               {"params": params, "opt": opt_state})
+        print(f"checkpoint -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Attribute collective bytes per op for one (arch, shape) train compile."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+import re, sys, jax, jax.numpy as jnp
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import ByzConfig
+from repro.distributed.steps import batch_shardings, input_specs, make_train_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import _parse_shape_bytes
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
+agg = sys.argv[2] if len(sys.argv) > 2 else "rfa"
+byz = ByzConfig(aggregator=agg, mixing="bucketing", s=2, worker_momentum=0.9, delta=0.1)
+cfg = get_config(arch)
+shape = INPUT_SHAPES["train_4k"]
+mesh = make_production_mesh()
+specs = input_specs(cfg, shape)
+b_sh = batch_shardings(cfg, shape, mesh)
+with mesh:
+    step_fn, sh = make_train_step(cfg, byz, mesh)
+    jitted = jax.jit(step_fn,
+        in_shardings=(sh["params"], sh["opt_state"], sh["worker_m"], sh["replicated"], b_sh),
+        out_shardings=(sh["params"], sh["opt_state"], sh["worker_m"], sh["replicated"]))
+    compiled = jitted.lower(sh["params_shape"], sh["opt_shape"], sh["wm_shape"],
+                            jax.ShapeDtypeStruct((2,), jnp.uint32), specs).compile()
+hlo = compiled.as_text()
+rows = []
+for line in hlo.splitlines():
+    m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^\s]+)\s+([a-z\-]+)\(", line.strip())
+    if not m:
+        continue
+    shape_str, op = m.group(1), m.group(2)
+    if op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute", "all-gather-start", "all-reduce-start"):
+        mm = re.search(r'op_name="([^"]*)"', line)
+        rows.append((_parse_shape_bytes(shape_str), op, (mm.group(1) if mm else "?")[:100]))
+rows.sort(reverse=True)
+tot = sum(r[0] for r in rows)
+print(f"total coll bytes (scan body once): {tot/1e9:.1f} GB, {len(rows)} ops")
+for b, op, name in rows[:15]:
+    print(f"{b/1e9:8.2f}GB {op:18s} {name}")

@@ -1,0 +1,60 @@
+"""Render EXPERIMENTS.md §Repro markdown tables from the benchmark CSV.
+
+    python scripts/render_repro.py bench_results.csv
+"""
+
+import csv
+import sys
+from collections import defaultdict
+
+
+def main(path):
+    rows = list(csv.DictReader(open(path)))
+    by_bench = defaultdict(dict)
+    for r in rows:
+        by_bench[r["benchmark"]][r["cell"]] = float(r["value"])
+
+    def pct(v):
+        return f"{100 * v:.1f}"
+
+    # tables 1-4: agg x {iid, noniid}
+    for t, title in [("table1", "Table 1 (delta=0, long-tail alpha=500)"),
+                     ("table2", "Table 2 (mimic, n=25 f=5)"),
+                     ("table3", "Table 3 = Table 1 + bucketing s=2"),
+                     ("table4", "Table 4 = Table 2 + bucketing s=2")]:
+        if t not in by_bench:
+            continue
+        cells = by_bench[t]
+        print(f"\n**{title}** — top-1 test acc %\n")
+        print("| aggregator | iid | non-iid |")
+        print("|---|---|---|")
+        for agg in ("mean", "krum", "cm", "rfa", "cclip"):
+            print(f"| {agg} | {pct(cells[f'{agg}/iid'])} | "
+                  f"{pct(cells[f'{agg}/noniid'])} |")
+
+    if "fig2" in by_bench:
+        cells = by_bench["fig2"]
+        print("\n**Figure 2** (non-iid, n=25 f=5, momentum 0.9) — "
+              "acc % without -> with bucketing\n")
+        print("| attack | krum | cm | rfa | cclip |")
+        print("|---|---|---|---|---|")
+        for atk in ("bf", "lf", "mimic", "ipm", "alie"):
+            row = f"| {atk} |"
+            for agg in ("krum", "cm", "rfa", "cclip"):
+                a = cells[f"{atk}/{agg}/none"]
+                b = cells[f"{atk}/{agg}/bucketing"]
+                row += f" {pct(a)} -> {pct(b)} |"
+            print(row)
+
+    for name in ("fig3", "fig8", "overparam", "krum_selection"):
+        if name not in by_bench:
+            continue
+        print(f"\n**{name}**\n")
+        print("| cell | value |")
+        print("|---|---|")
+        for cell, v in by_bench[name].items():
+            print(f"| {cell} | {v:.4f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "bench_results.csv")

@@ -1,0 +1,22 @@
+"""Qwen2.5-14B — dense, GQA kv=8, QKV bias [hf:Qwen/Qwen2.5-0.5B]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=152064,
+    qkv_bias=True,
+    mlp_kind="swiglu",
+    fsdp=True,
+    momentum_mode="server",
+    remat="full",
+    long_context="window",
+    long_context_window=8192,
+    source="hf:Qwen/Qwen2.5-0.5B",
+)

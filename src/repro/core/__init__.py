@@ -1,0 +1,48 @@
+"""The paper's contribution: mixing (bucketing/resampling) + agnostic robust
+aggregation + worker momentum, plus the attacks it defends against."""
+
+from repro.core.aggregators import (
+    Aggregator,
+    CenteredClip,
+    CoordinateWiseMedian,
+    Krum,
+    Mean,
+    RFA,
+    TrimmedMean,
+    get_aggregator,
+)
+from repro.core.aragg import DELTA_MAX, RobustAggregator, theorem1_s
+from repro.core.attacks import Attack, get_attack
+from repro.core.mixing import (
+    Bucketing,
+    FixedGrouping,
+    Mixer,
+    NoMix,
+    Resampling,
+    get_mixer,
+)
+from repro.core.momentum import cclip_radius, momentum_update
+
+__all__ = [
+    "Aggregator",
+    "Mean",
+    "Krum",
+    "CoordinateWiseMedian",
+    "TrimmedMean",
+    "RFA",
+    "CenteredClip",
+    "get_aggregator",
+    "RobustAggregator",
+    "DELTA_MAX",
+    "theorem1_s",
+    "Attack",
+    "get_attack",
+    "Mixer",
+    "NoMix",
+    "Bucketing",
+    "Resampling",
+    "FixedGrouping",
+    "get_mixer",
+    "momentum_update",
+    "cclip_radius",
+]

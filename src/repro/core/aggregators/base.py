@@ -1,0 +1,86 @@
+"""Robust aggregator abstraction.
+
+Every aggregator supports two equivalent forms:
+
+1. **Stacked form** — ``aggregate(xs)`` with ``xs: [n, d]`` returning ``[d]``.
+   Used by the paper-scale simulation path (MNIST experiments) where the
+   whole stacked gradient matrix fits in memory.
+
+2. **Factorized (Gram-space) form** — for the distributed path where the
+   ``[n_workers, n_params]`` matrix must never exist. Aggregators declare
+   either:
+
+   - ``coordinatewise = True`` (CM, trimmed mean): aggregation is exact when
+     applied leaf-by-leaf via ``combine_leaf``; or
+   - a ``coeffs(gram, key)`` method mapping the ``[n, n]`` fp32 Gram matrix
+     ``G[i, j] = <x_i, x_j>`` to combination coefficients ``w: [n]`` such
+     that the aggregate equals ``sum_i w_i x_i`` *exactly* (Krum: one-hot;
+     RFA: Weiszfeld weights computed in coefficient space; CCLIP: clipped
+     update run in coefficient space; mean: uniform).
+
+   The Gram trick works because every iterate of these algorithms stays in
+   ``span{x_1..x_n}``, and all required norms/distances are bilinear forms
+   of G. Mixing (bucketing/resampling) is a linear operator ``M`` and
+   composes as ``G_mixed = M G M^T`` with final worker weights ``M^T w``.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_from_gram(gram: jnp.ndarray) -> jnp.ndarray:
+    """``D[i,j] = ||x_i - x_j||^2`` from the Gram matrix."""
+    diag = jnp.diagonal(gram)
+    return diag[:, None] + diag[None, :] - 2.0 * gram
+
+
+class Aggregator(abc.ABC):
+    """Base class. Subclasses set ``name`` and implement one of the forms."""
+
+    name: str = "base"
+    #: True => exact leaf-local aggregation via combine_leaf (CM, TM).
+    coordinatewise: bool = False
+
+    # ---------------------------------------------------------------- stacked
+    def aggregate(self, xs: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Aggregate stacked worker vectors ``xs: [n, d] -> [d]``."""
+        if self.coordinatewise:
+            return self.combine_leaf(xs)
+        gram = (xs.astype(jnp.float32) @ xs.astype(jnp.float32).T)
+        w = self.coeffs(gram, key=key)
+        return jnp.tensordot(w.astype(xs.dtype), xs, axes=1)
+
+    # ------------------------------------------------------------- factorized
+    def coeffs(self, gram: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Combination coefficients ``[n]`` from the Gram matrix ``[n, n]``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the Gram-space form"
+        )
+
+    def combine_leaf(self, xs_leaf: jnp.ndarray) -> jnp.ndarray:
+        """Exact leaf-local aggregation ``[n, ...] -> [...]`` (coordinatewise only)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} is not coordinatewise"
+        )
+
+    # ----------------------------------------------------------------- extras
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"{type(self).__name__}()"
+
+
+class Mean(Aggregator):
+    """Plain averaging — the non-robust baseline (``Avg`` in the paper)."""
+
+    name = "mean"
+
+    def coeffs(self, gram, key=None):
+        n = gram.shape[0]
+        return jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+    def aggregate(self, xs, key=None):
+        return jnp.mean(xs, axis=0)

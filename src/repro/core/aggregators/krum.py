@@ -1,0 +1,55 @@
+"""Krum and Multi-Krum (Blanchard et al., 2017).
+
+``Krum`` selects the worker whose summed squared distance to its
+``n - f - 2`` nearest neighbours is smallest. Multi-Krum averages the ``m``
+best-scoring workers. Both are one-hot / sparse in the workers, so the
+Gram-space form is exact.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.aggregators.base import Aggregator, pairwise_sq_dists_from_gram
+
+
+class Krum(Aggregator):
+    name = "krum"
+
+    def __init__(self, n_byzantine: int = 0, m: int = 1):
+        """Args:
+        n_byzantine: assumed number of Byzantine inputs ``f`` (score uses
+            the ``n - f - 2`` closest neighbours, as in the paper).
+        m: number of top-scoring workers to average (``m=1`` = classic Krum).
+        """
+        self.n_byzantine = int(n_byzantine)
+        self.m = int(m)
+
+    def scores(self, gram: jnp.ndarray) -> jnp.ndarray:
+        n = gram.shape[0]
+        dists = pairwise_sq_dists_from_gram(gram)
+        # exclude self-distance by making it +inf, then take the
+        # (n - f - 2) closest others for each row.
+        big = jnp.finfo(jnp.float32).max
+        dists = dists + jnp.eye(n, dtype=dists.dtype) * big
+        k = max(1, min(n - 1, n - self.n_byzantine - 2))
+        neg_sorted = jnp.sort(dists, axis=1)  # ascending
+        return jnp.sum(neg_sorted[:, :k], axis=1)
+
+    def coeffs(self, gram, key: Optional[object] = None):
+        n = gram.shape[0]
+        s = self.scores(gram)
+        if self.m <= 1:
+            return jnp.zeros((n,), jnp.float32).at[jnp.argmin(s)].set(1.0)
+        # multi-krum: average of the m best
+        order = jnp.argsort(s)
+        w = jnp.zeros((n,), jnp.float32)
+        w = w.at[order[: self.m]].set(1.0 / self.m)
+        return w
+
+    def selected_index(self, xs: jnp.ndarray) -> jnp.ndarray:
+        """Index of the selected worker (used by the Figure-6 experiment)."""
+        gram = xs.astype(jnp.float32) @ xs.astype(jnp.float32).T
+        return jnp.argmin(self.scores(gram))

@@ -1,0 +1,54 @@
+"""RFA — geometric median via the smoothed Weiszfeld algorithm
+(Pillutla et al., 2019).
+
+Weiszfeld iterates ``v <- sum_i w_i x_i / sum_i w_i`` with
+``w_i = 1 / max(eps, ||v - x_i||)``. Every iterate lies in the convex hull
+of the inputs, so with ``v = sum_i c_i x_i`` all residual norms are bilinear
+forms of the Gram matrix:
+
+    ||v - x_i||^2 = c^T G c - 2 (G c)_i + G_ii
+
+which lets us run the whole algorithm in coefficient space (``coeffs``),
+touching the actual d-dimensional vectors only once at the end. This is the
+key to the factorized distributed path (see repro/distributed/robust_sync).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregators.base import Aggregator
+
+
+class RFA(Aggregator):
+    name = "rfa"
+
+    def __init__(self, n_iters: int = 8, eps: float = 1e-6):
+        """Args:
+        n_iters: Weiszfeld iterations ``T`` (paper default T=8).
+        eps: smoothing constant nu of the smoothed Weiszfeld algorithm.
+        """
+        self.n_iters = int(n_iters)
+        self.eps = float(eps)
+
+    def coeffs(self, gram: jnp.ndarray, key: Optional[object] = None) -> jnp.ndarray:
+        n = gram.shape[0]
+        gram = gram.astype(jnp.float32)
+        c0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)  # start from the mean
+
+        def resid_sq_norms(c):
+            gc = gram @ c
+            quad = c @ gc
+            return jnp.maximum(quad - 2.0 * gc + jnp.diagonal(gram), 0.0)
+
+        def body(c, _):
+            r = jnp.sqrt(resid_sq_norms(c) + self.eps**2)
+            w = 1.0 / r
+            c_new = w / jnp.sum(w)
+            return c_new, None
+
+        c, _ = jax.lax.scan(body, c0, None, length=self.n_iters)
+        return c

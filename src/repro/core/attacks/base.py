@@ -1,0 +1,59 @@
+"""Attack abstraction.
+
+An attack transforms the stacked matrix of *would-be* worker updates
+``[n, d]`` (rows ``byz_mask`` True are under adversary control) into the
+matrix actually sent to the server. Attacks may carry state (e.g. mimic's
+streaming top-eigenvector) threaded through ``update_state``.
+
+Byzantine workers are omniscient per the threat model: they see all good
+updates and may collude.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Attack(abc.ABC):
+    name: str = "attack"
+
+    def init_state(self, n: int, d: int) -> Any:
+        return None
+
+    @abc.abstractmethod
+    def __call__(
+        self,
+        xs: jnp.ndarray,
+        byz_mask: jnp.ndarray,
+        state: Any = None,
+        key: Optional[jax.Array] = None,
+    ) -> Tuple[jnp.ndarray, Any]:
+        """Return (attacked xs, new state)."""
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{type(self).__name__}()"
+
+
+class NoAttack(Attack):
+    name = "none"
+
+    def __call__(self, xs, byz_mask, state=None, key=None):
+        return xs, state
+
+
+def good_mean(xs: jnp.ndarray, byz_mask: jnp.ndarray) -> jnp.ndarray:
+    w = (~byz_mask).astype(jnp.float32)
+    return (w @ xs.astype(jnp.float32)) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def good_std(xs: jnp.ndarray, byz_mask: jnp.ndarray) -> jnp.ndarray:
+    mu = good_mean(xs, byz_mask)
+    w = (~byz_mask).astype(jnp.float32)[:, None]
+    var = jnp.sum(w * jnp.square(xs.astype(jnp.float32) - mu), axis=0) / jnp.maximum(
+        jnp.sum(w), 1.0
+    )
+    return jnp.sqrt(var)

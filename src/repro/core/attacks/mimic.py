@@ -1,0 +1,85 @@
+"""The mimic attack (paper §3.2, App. B).
+
+All Byzantine workers copy the update of one *good* worker ``i_star``,
+over-emphasizing it and under-representing the others. Undetectable by
+construction (the copied vector is a legitimate update).
+
+``i_star`` is chosen during a warmup phase ``I_0`` to maximize
+``|sum_t z^T x_i^t|`` along the direction ``z`` of maximum across-worker
+variance; ``z`` is maintained online with Oja's rule (App. B):
+
+    mu^{t+1} = t/(t+1) mu^t + 1/(t+1) mean_G(x^t)
+    z^{t+1} ~ t/(t+1) z^t + 1/(t+1) sum_G (x_i - mu)(x_i - mu)^T z^t
+    i_star^t = argmax_i | z^T x_i^t |   (cumulative score over warmup)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attacks.base import Attack, good_mean
+
+
+class MimicState(NamedTuple):
+    t: jnp.ndarray          # step counter (scalar int32)
+    mu: jnp.ndarray         # running mean of good updates [d]
+    z: jnp.ndarray          # Oja top-eigenvector estimate [d]
+    score: jnp.ndarray      # cumulative |z . x_i| per worker [n]
+    i_star: jnp.ndarray     # currently mimicked worker (scalar int32)
+
+
+class Mimic(Attack):
+    name = "mimic"
+
+    def __init__(self, warmup_steps: int = 100):
+        self.warmup_steps = int(warmup_steps)
+
+    def init_state(self, n: int, d: int) -> MimicState:
+        return MimicState(
+            t=jnp.zeros((), jnp.int32),
+            mu=jnp.zeros((d,), jnp.float32),
+            z=jnp.ones((d,), jnp.float32) / jnp.sqrt(d),
+            score=jnp.zeros((n,), jnp.float32),
+            i_star=jnp.zeros((), jnp.int32),
+        )
+
+    def __call__(self, xs, byz_mask, state: Optional[MimicState] = None, key=None):
+        if state is None:
+            state = self.init_state(xs.shape[0], xs.shape[1])
+        x32 = xs.astype(jnp.float32)
+        good = (~byz_mask).astype(jnp.float32)
+        t = state.t.astype(jnp.float32)
+
+        # --- online mean and Oja top-eigenvector update over good updates
+        mu = (t * state.mu + good_mean(xs, byz_mask)) / (t + 1.0)
+        centered = (x32 - mu[None, :]) * good[:, None]
+        cov_z = centered.T @ (centered @ state.z)  # sum_G (x-mu)(x-mu)^T z
+        z = (t * state.z + cov_z) / (t + 1.0)
+        z = z / jnp.maximum(jnp.linalg.norm(z), 1e-12)
+
+        # --- cumulative projection scores; Byzantine rows excluded
+        proj = jnp.abs(x32 @ z) * good
+        score = state.score + proj
+
+        in_warmup = state.t < self.warmup_steps
+        i_star = jnp.where(in_warmup, jnp.argmax(score), state.i_star).astype(jnp.int32)
+
+        new_state = MimicState(state.t + 1, mu, z, score, i_star)
+        mal = xs[i_star]
+        return jnp.where(byz_mask[:, None], mal[None, :], xs), new_state
+
+
+class MimicFixed(Attack):
+    """Mimic a fixed worker index (the paper's §3.2 intuition example)."""
+
+    name = "mimic_fixed"
+
+    def __init__(self, i_star: int = 0):
+        self.i_star = int(i_star)
+
+    def __call__(self, xs, byz_mask, state=None, key=None):
+        mal = xs[self.i_star]
+        return jnp.where(byz_mask[:, None], mal[None, :], xs), state

@@ -1,0 +1,77 @@
+"""Bit-flipping, IPM and ALIE attacks.
+
+- **BF** (bit flipping): Byzantine rows send the negation of what they would
+  have sent (sign-bit flip, modeling e.g. hardware faults).
+- **IPM** (inner-product manipulation, Xie et al. 2020): Byzantine rows send
+  ``-(eps/|G|) sum_{i in G} x_i`` — a small consistent bias whose inner
+  product with the true mean is negative. Paper uses eps = 0.1.
+- **ALIE** ("a little is enough", Baruch et al. 2019): Byzantine rows send
+  ``mu_G - z * sigma_G`` with z chosen from the normal CDF so the perturbed
+  value stays inside the plausible range of good updates.
+
+Label-flipping is a *data* attack and lives in repro/core/byzantine.py
+(it corrupts the Byzantine workers' datasets, not their messages).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.core.attacks.base import Attack, good_mean, good_std
+
+
+class BitFlipping(Attack):
+    name = "bitflip"
+
+    def __call__(self, xs, byz_mask, state=None, key=None):
+        return jnp.where(byz_mask[:, None], -xs, xs), state
+
+
+class IPM(Attack):
+    name = "ipm"
+
+    def __init__(self, eps: float = 0.1):
+        self.eps = float(eps)
+
+    def __call__(self, xs, byz_mask, state=None, key=None):
+        mal = (-self.eps) * good_mean(xs, byz_mask)
+        return jnp.where(byz_mask[:, None], mal[None, :].astype(xs.dtype), xs), state
+
+
+def alie_z(n: int, f: int) -> float:
+    """z = max z s.t. phi(z) < (n - f - s)/(n - f), s = floor(n/2 + 1) - f.
+
+    (Baruch et al. 2019; the paper reports z ~= 0.25 for n=25, f=5.)
+    """
+    s = math.floor(n / 2 + 1) - f
+    p = (n - f - s) / max(n - f, 1)
+    p = min(max(p, 1e-6), 1 - 1e-6)
+    # inverse normal CDF via erfinv
+    return math.sqrt(2.0) * _erfinv(2 * p - 1)
+
+
+def _erfinv(x: float) -> float:
+    # Winitzki's approximation — plenty for picking the attack strength.
+    a = 0.147
+    ln1 = math.log(1 - x * x)
+    term = 2 / (math.pi * a) + ln1 / 2
+    return math.copysign(math.sqrt(math.sqrt(term**2 - ln1 / a) - term), x)
+
+
+class ALIE(Attack):
+    name = "alie"
+
+    def __init__(self, z: float | None = None, n: int | None = None, f: int | None = None):
+        if z is None:
+            if n is None or f is None:
+                raise ValueError("ALIE needs either z or (n, f)")
+            z = alie_z(n, f)
+        self.z = float(z)
+
+    def __call__(self, xs, byz_mask, state=None, key=None):
+        mu = good_mean(xs, byz_mask)
+        sd = good_std(xs, byz_mask)
+        mal = (mu - self.z * sd).astype(xs.dtype)
+        return jnp.where(byz_mask[:, None], mal[None, :], xs), state

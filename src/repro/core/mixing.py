@@ -1,0 +1,155 @@
+"""Gradient mixing — the paper's core contribution (Algorithm 1).
+
+Two variants by the same authors:
+
+- **Resampling** (preprint, Algorithm 1): replicate each of the ``n`` inputs
+  ``s`` times, randomly permute the ``s*n`` copies, average consecutive
+  groups of ``s``. Output: ``n`` mixed vectors; each original input is used
+  at most ``s`` times (s-resampling *without* replacement).
+- **Bucketing** (ICLR camera-ready; preprint App. A.2.4): randomly permute
+  the ``n`` inputs, split into ``ceil(n/s)`` buckets, average each bucket.
+  Output: ``ceil(n/s)`` mixed vectors. Same Lemma-1 guarantee, but it also
+  *shrinks* the aggregator's input set, reducing downstream cost.
+
+Both are *linear* operators: ``y = M x`` with a row-stochastic ``[m, n]``
+matrix whose entries are in ``{0, k/s}``. We exploit linearity everywhere:
+
+- stacked path: ``ys = M @ xs``;
+- Gram path:    ``G_y = M G_x M^T`` and final worker weights ``M^T w``;
+- collective path: bucketing with contiguous buckets of the (already
+  permuted) worker axis is a *hierarchical partial all-reduce* on the mesh.
+
+``FixedGrouping`` (Chen et al., 2017 style, paper App. A.2.6) is bucketing
+with the identity permutation, kept as a baseline.
+"""
+
+from __future__ import annotations
+
+import abc
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Mixer(abc.ABC):
+    """Builds the mixing matrix ``M: [m, n]`` for a given round."""
+
+    name: str = "mixer"
+    #: mixing factor s (1 = no-op shuffle)
+    s: int = 1
+
+    @abc.abstractmethod
+    def n_out(self, n: int) -> int:
+        ...
+
+    @abc.abstractmethod
+    def matrix(self, key: Optional[jax.Array], n: int) -> jnp.ndarray:
+        """Return the row-stochastic mixing matrix ``[n_out, n]`` (fp32)."""
+
+    # Convenience: stacked application.
+    def apply(self, key: Optional[jax.Array], xs: jnp.ndarray) -> jnp.ndarray:
+        m = self.matrix(key, xs.shape[0])
+        return (m @ xs.astype(jnp.float32)).astype(xs.dtype)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{type(self).__name__}(s={self.s})"
+
+
+class NoMix(Mixer):
+    """Identity (vanilla aggregation, the paper's 'without' columns)."""
+
+    name = "none"
+    s = 1
+
+    def n_out(self, n: int) -> int:
+        return n
+
+    def matrix(self, key, n):
+        return jnp.eye(n, dtype=jnp.float32)
+
+    def apply(self, key, xs):
+        return xs
+
+
+class Bucketing(Mixer):
+    """ICLR camera-ready bucketing: permute, split into ceil(n/s) buckets, average.
+
+    If ``s`` does not divide ``n`` the last bucket is smaller; its row of M
+    averages over the remaining inputs (still row-stochastic).
+    """
+
+    name = "bucketing"
+
+    def __init__(self, s: int = 2):
+        if s < 1:
+            raise ValueError("s must be >= 1")
+        self.s = int(s)
+
+    def n_out(self, n: int) -> int:
+        return math.ceil(n / self.s)
+
+    def matrix(self, key, n):
+        m = self.n_out(n)
+        perm = jnp.arange(n) if key is None else jax.random.permutation(key, n)
+        # bucket b holds permuted inputs [b*s, min((b+1)*s, n))
+        bucket_of = jnp.arange(n) // self.s  # bucket of each *slot*
+        sizes = jnp.bincount(bucket_of, length=m).astype(jnp.float32)
+        mat = jnp.zeros((m, n), jnp.float32)
+        mat = mat.at[bucket_of, perm].set(1.0)
+        return mat / sizes[:, None]
+
+
+class FixedGrouping(Bucketing):
+    """Bucketing without the per-round random permutation (Chen et al. 2017)."""
+
+    name = "fixed_grouping"
+
+    def matrix(self, key, n):
+        return super().matrix(None, n)
+
+
+class Resampling(Mixer):
+    """Preprint Algorithm 1: s-fold replication + permutation + group-average.
+
+    Each input is replicated exactly ``s`` times; the ``s*n`` slots are
+    permuted and consecutive groups of ``s`` are averaged, producing ``n``
+    outputs. Each input influences at most ``s`` outputs (sampling without
+    replacement), which is what bounds the Byzantine amplification in
+    Lemma 1.
+    """
+
+    name = "resampling"
+
+    def __init__(self, s: int = 2):
+        if s < 1:
+            raise ValueError("s must be >= 1")
+        self.s = int(s)
+
+    def n_out(self, n: int) -> int:
+        return n
+
+    def matrix(self, key, n):
+        s = self.s
+        total = s * n
+        src = jnp.arange(total) // s  # replica k comes from input ceil(k/s)
+        perm = jnp.arange(total) if key is None else jax.random.permutation(key, total)
+        group_of = jnp.arange(total) // s  # output group of each slot
+        mat = jnp.zeros((n, n), jnp.float32)
+        # slot t holds replica perm[t] of input src[perm[t]], feeding group_of[t]
+        mat = mat.at[group_of, src[perm]].add(1.0 / s)
+        return mat
+
+
+def get_mixer(name: str, s: int = 2) -> Mixer:
+    name = (name or "none").lower()
+    if name in ("none", "identity", "no", ""):
+        return NoMix()
+    if name == "bucketing":
+        return Bucketing(s)
+    if name == "resampling":
+        return Resampling(s)
+    if name == "fixed_grouping":
+        return FixedGrouping(s)
+    raise KeyError(f"unknown mixer {name!r}")

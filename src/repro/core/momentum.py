@@ -1,0 +1,57 @@
+"""Worker momentum (Algorithm 2) and server momentum (Remark 7).
+
+Algorithm 2 (paper-faithful EMA convention):
+
+    m_i^t = beta * m_i^{t-1} + (1 - beta) * g_i(x^{t-1})     (workers)
+    x^t   = x^{t-1} - eta * ARAGG(m_1^t .. m_n^t)            (server)
+
+The PyTorch convention ``m <- beta m + g`` (used by the paper's experiments,
+App. A.2.1, motivating the tau = 10/(1-beta) clipping-radius scaling) is
+also supported via ``convention="pytorch"``.
+
+Server momentum (Remark 7, cross-device FL / history-less workers): workers
+send raw gradients, the server robust-aggregates then applies momentum to
+the *aggregate*. Its state is O(model) not O(n_workers * model), which is
+what the giant-model configs use (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Convention = Literal["ema", "pytorch"]
+
+
+def momentum_update(m, g, beta: float, convention: Convention = "ema"):
+    """One momentum step on a pytree (or stacked array) of gradients."""
+    if convention == "ema":
+        return jax.tree_util.tree_map(
+            lambda mi, gi: beta * mi + (1.0 - beta) * gi, m, g
+        )
+    if convention == "pytorch":
+        return jax.tree_util.tree_map(lambda mi, gi: beta * mi + gi, m, g)
+    raise ValueError(f"unknown momentum convention {convention!r}")
+
+
+def init_worker_momentum(g0):
+    """Paper initialization: m^1 = g(x^0) (i.e. alpha=0 at t=1)."""
+    return g0
+
+
+def cclip_radius(beta: float, base_tau: float = 10.0, scaling: str = "linear") -> float:
+    """The paper's clipping-radius rule for CCLIP (App. A.2.1).
+
+    linear: tau = base / (1 - beta)   (recommended)
+    sqrt:   tau = base / sqrt(1 - beta)
+    none:   tau = base
+    """
+    if scaling == "linear":
+        return base_tau / (1.0 - beta) if beta < 1.0 else float("inf")
+    if scaling == "sqrt":
+        return base_tau / (1.0 - beta) ** 0.5 if beta < 1.0 else float("inf")
+    if scaling == "none":
+        return base_tau
+    raise ValueError(f"unknown scaling {scaling!r}")

@@ -1,0 +1,20 @@
+from repro.data.partition import (
+    long_tail_subsample,
+    partition_by_label,
+    partition_iid,
+    worker_datasets,
+)
+from repro.data.pipeline import sample_token_batches, sample_worker_batches
+from repro.data.synthetic import make_classification, make_token_stream, make_train_test
+
+__all__ = [
+    "make_classification",
+    "make_train_test",
+    "make_token_stream",
+    "long_tail_subsample",
+    "partition_iid",
+    "partition_by_label",
+    "worker_datasets",
+    "sample_worker_batches",
+    "sample_token_batches",
+]

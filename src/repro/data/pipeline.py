@@ -1,0 +1,32 @@
+"""Per-worker minibatch pipeline.
+
+Simulation path: datasets are dense arrays ``[n_workers, m, ...]``; each
+step draws a per-worker batch with a folded PRNG — pure, jit-able, and
+vmap-able over workers. (The distributed path shards the leading worker
+axis over the (pod, data) mesh axes; the same sampler runs per-shard.)
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_worker_batches(
+    key, data_x: jnp.ndarray, data_y: jnp.ndarray, batch_size: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """data_x: [W, m, ...], data_y: [W, m] -> ([W, B, ...], [W, B])."""
+    W, m = data_x.shape[0], data_x.shape[1]
+    idx = jax.random.randint(key, (W, batch_size), 0, m)
+    bx = jnp.take_along_axis(data_x, idx[..., None], axis=1)
+    by = jnp.take_along_axis(data_y, idx, axis=1)
+    return bx, by
+
+
+def sample_token_batches(key, seqs: jnp.ndarray, batch_size: int) -> jnp.ndarray:
+    """seqs: [W, n_seqs, L] -> [W, B, L]."""
+    W, n, _ = seqs.shape
+    idx = jax.random.randint(key, (W, batch_size), 0, n)
+    return jnp.take_along_axis(seqs, idx[..., None], axis=1)

@@ -1,0 +1,100 @@
+"""Synthetic datasets (the container has no dataset downloads).
+
+``make_classification`` builds a seeded 10-class Gaussian-mixture image
+dataset ("SynthMNIST", 784-d) whose class structure is learnable by the
+paper's MLP; heterogeneity phenomena (sort-by-label partitions, long-tail
+class imbalance) are distribution-level and reproduce qualitatively (see
+DESIGN.md §7).
+
+``make_token_stream`` builds per-worker token sequences for LLM training:
+tokens follow a noisy affine bigram law ``next = (a*tok + b) mod V`` with
+per-worker (a, b) "dialects" — heterogeneous workers have different laws,
+which yields genuinely non-iid gradients for the Byzantine experiments.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_classification(
+    key,
+    n_samples: int = 10000,
+    n_classes: int = 10,
+    dim: int = 784,
+    class_sep: float = 2.0,
+    noise: float = 0.3,
+    means_key=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x [N, dim], y [N]) — equal samples per class, shuffled.
+
+    ``means_key`` fixes the class means independently of the sampling key so
+    separately-drawn train and test sets share the same task.
+    """
+    k_means, k_noise, k_perm = jax.random.split(key, 3)
+    if means_key is not None:
+        k_means = means_key
+    means = jax.random.normal(k_means, (n_classes, dim))
+    means = means / jnp.linalg.norm(means, axis=1, keepdims=True) * class_sep
+    per = n_samples // n_classes
+    y = jnp.repeat(jnp.arange(n_classes), per)
+    x = means[y] + jax.random.normal(k_noise, (per * n_classes, dim)) * noise
+    perm = jax.random.permutation(k_perm, x.shape[0])
+    return x[perm], y[perm]
+
+
+def make_train_test(
+    key, n_train: int = 10000, n_test: int = 2000, **kw
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Train/test split sharing class means (the 'SynthMNIST' task)."""
+    k_means, k_train, k_test = jax.random.split(key, 3)
+    xtr, ytr = make_classification(k_train, n_train, means_key=k_means, **kw)
+    xte, yte = make_classification(k_test, n_test, means_key=k_means, **kw)
+    return xtr, ytr, xte, yte
+
+
+def make_token_stream(
+    key,
+    n_workers: int,
+    seq_len: int,
+    n_seqs_per_worker: int,
+    vocab: int,
+    heterogeneous: bool = True,
+    noise_p: float = 0.1,
+) -> jnp.ndarray:
+    """Returns tokens [n_workers, n_seqs, seq_len+1] (inputs + next-token labels).
+
+    Each worker's stream follows ``next = (a_w * tok + b_w) mod V`` with
+    probability 1-noise_p (uniform otherwise). Homogeneous mode shares one
+    (a, b) across workers.
+    """
+    k_ab, k_init, k_noise, k_unif = jax.random.split(key, 4)
+    n_laws = n_workers if heterogeneous else 1
+    a = jax.random.randint(k_ab, (n_laws,), 1, 97) * 2 + 1  # odd multipliers
+    b = jax.random.randint(jax.random.fold_in(k_ab, 1), (n_laws,), 0, vocab)
+    if not heterogeneous:
+        a = jnp.broadcast_to(a, (n_workers,))
+        b = jnp.broadcast_to(b, (n_workers,))
+
+    shape = (n_workers, n_seqs_per_worker)
+    tok0 = jax.random.randint(k_init, shape, 0, vocab)
+    flips = jax.random.bernoulli(k_noise, noise_p, shape + (seq_len,))
+    unif = jax.random.randint(k_unif, shape + (seq_len,), 0, vocab)
+
+    def step(tok, inputs):
+        flip, u = inputs
+        nxt = jnp.mod(a[:, None] * tok + b[:, None], vocab)
+        nxt = jnp.where(flip, u, nxt)
+        return nxt, tok
+
+    _, toks = jax.lax.scan(
+        step, tok0, (jnp.moveaxis(flips, -1, 0), jnp.moveaxis(unif, -1, 0))
+    )
+    toks = jnp.moveaxis(toks, 0, -1)  # [W, n_seqs, seq_len]
+    # append one more step for labels
+    last = jnp.mod(a[:, None] * toks[..., -1] + b[:, None], vocab)
+    return jnp.concatenate([toks, last[..., None]], axis=-1)

@@ -1,0 +1,131 @@
+"""Sharding rule engine.
+
+Generic per-leaf rules instead of a hand-written table per architecture:
+
+- tensor ("model") axis: the largest dim divisible by the model-axis size
+  (prefers the last dims — the d_ff / head / expert-shaped ones);
+- optional FSDP: among remaining dims, the largest one divisible by the
+  combined (pod, data) size — or just data — is sharded over those axes
+  (params, grads and optimizer state all follow the same spec);
+- leaves under "blocks" carry a leading period axis (lax.scan stacking)
+  which is never sharded;
+- decode caches get dedicated rules (batch over workers; for batch-1 long
+  contexts the cache length shards over the data axis = sequence
+  parallelism for the KV cache).
+
+Per-arch overrides (the §Perf hillclimb lever) can replace the inferred
+spec via ``overrides={path_regex: PartitionSpec}``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+    )
+
+
+def _pick_dim(shape, size: int, taken: set, start: int = 0) -> Optional[int]:
+    """Largest dim (index >= start, not taken) divisible by ``size``."""
+    best, best_dim = -1, None
+    for i in range(start, len(shape)):
+        if i in taken:
+            continue
+        if shape[i] % size == 0 and shape[i] >= size and shape[i] > best:
+            best, best_dim = shape[i], i
+    return best_dim
+
+
+def infer_param_spec(
+    path_str: str,
+    shape,
+    mesh: Mesh,
+    fsdp: bool = False,
+) -> P:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = axes.get("model", 1)
+    start = 1 if path_str.startswith("blocks") and len(shape) > 1 else 0
+    spec = [None] * len(shape)
+    taken: set = set()
+
+    m_dim = _pick_dim(shape, model_size, taken, start)
+    if m_dim is not None and model_size > 1:
+        spec[m_dim] = "model"
+        taken.add(m_dim)
+
+    if fsdp:
+        worker_axes = tuple(a for a in ("pod", "data") if a in axes)
+        combined = int(np.prod([axes[a] for a in worker_axes])) if worker_axes else 1
+        f_dim = _pick_dim(shape, combined, taken, start)
+        if f_dim is not None and combined > 1:
+            spec[f_dim] = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+            taken.add(f_dim)
+        elif "data" in axes:  # fall back to data-only FSDP
+            f_dim = _pick_dim(shape, axes["data"], taken, start)
+            if f_dim is not None and axes["data"] > 1:
+                spec[f_dim] = "data"
+    return P(*spec)
+
+
+def param_shardings(params, mesh: Mesh, fsdp: bool = False, overrides: Optional[Dict[str, P]] = None):
+    """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    overrides = overrides or {}
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for pat, spec in overrides.items():
+            if re.search(pat, ps):
+                return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, infer_param_spec(ps, leaf.shape, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Global batch dim over all worker axes."""
+    w = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(w if len(w) > 1 else (w[0] if w else None))
+
+
+def cache_shardings(cache, mesh: Mesh, batch: int):
+    """Decode-cache shardings. Leaves: [period, B, L, KV, dh] (attn k/v),
+    [period, B, K-1, C] (conv), [period, B, H, P, N] (ssm state)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    worker_axes = tuple(a for a in ("pod", "data") if a in axes)
+    n_work = int(np.prod([axes[a] for a in worker_axes]))
+    model_size = axes.get("model", 1)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # dim 0 = period axis (never sharded); dim 1 = batch
+        if batch % n_work == 0 and batch >= n_work:
+            spec[1] = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+            # shard heads/channels over model where divisible
+            d = _pick_dim(shape, model_size, {0, 1}, 2)
+            if d is not None:
+                spec[d] = "model"
+        else:
+            # batch-1 long-context: sequence-shard the cache over data,
+            # heads over model where divisible.
+            ps = _path_str(path)
+            if ("k" in ps.split("/")[-1] or "v" in ps.split("/")[-1]) and len(shape) == 5:
+                if shape[2] % axes.get("data", 1) == 0:
+                    spec[2] = "data"
+                if shape[3] % model_size == 0 and shape[3] >= model_size:
+                    spec[3] = "model"
+            else:
+                d = _pick_dim(shape, model_size, {0, 1}, 2)
+                if d is not None:
+                    spec[d] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the robust-aggregation hot spots (DESIGN.md §3).
+
+The paper's server-side cost is dominated by streaming the ``[W, d]``
+stacked worker gradients (d up to 10^12 / n_chips): the Gram stats phase
+(Krum/RFA/CCLIP), the coordinate-wise median, the Weiszfeld/CCLIP inner
+iterations, and the Algorithm-1 mixing itself. Each is a one- or two-pass
+streaming kernel with explicit BlockSpec VMEM tiling; pure-jnp oracles live
+in ``ref.py`` and the jit'd public API in ``ops.py``.
+
+Validated with ``interpret=True`` on CPU (Mosaic does not lower on the CPU
+backend); on TPU the identical ``pl.pallas_call``s compile natively.
+"""
+
+from repro.kernels.bucket_mix import bucket_mix
+from repro.kernels.cclip_combine import cclip_combine
+from repro.kernels.cwise_median import cwise_median
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.pairwise_gram import pairwise_gram
+from repro.kernels.weiszfeld_norms import residual_norms
+
+__all__ = [
+    "bucket_mix",
+    "cclip_combine",
+    "cwise_median",
+    "flash_attention",
+    "pairwise_gram",
+    "residual_norms",
+]

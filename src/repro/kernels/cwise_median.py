@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: coordinate-wise median over the worker axis.
+
+CM aggregates n <= 64 worker vectors per coordinate. On GPU this is a
+per-thread selection; the TPU-native adaptation (DESIGN.md §3) keeps the
+worker axis resident in sublanes and runs an **odd-even transposition sort**
+— W rounds of vectorized compare-exchange (min/max) over [1, bd] rows, a
+pure VPU workload with no data-dependent control flow. The sort network is
+fully unrolled at trace time (W is static and small), so Mosaic sees only
+static slices.
+
+Padding rows are +inf so they sort to the bottom and never cross the median
+index.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sorted_rows(x: jnp.ndarray, W: int) -> jnp.ndarray:
+    """Odd-even transposition sort of the first W rows of x (ascending)."""
+    rows = [x[i] for i in range(W)]
+    for r in range(W):
+        start = r % 2
+        for i in range(start, W - 1, 2):
+            lo = jnp.minimum(rows[i], rows[i + 1])
+            hi = jnp.maximum(rows[i], rows[i + 1])
+            rows[i], rows[i + 1] = lo, hi
+    return rows
+
+
+def _median_kernel(x_ref, out_ref, *, W: int):
+    x = x_ref[...].astype(jnp.float32)  # [Wp, bd]
+    rows = _sorted_rows(x, W)
+    mid = W // 2
+    if W % 2 == 1:
+        med = rows[mid]
+    else:
+        med = 0.5 * (rows[mid - 1] + rows[mid])
+    out_ref[...] = med[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def cwise_median(xs: jnp.ndarray, *, block_d: int = 1024, interpret: bool = True):
+    """xs: [W, d] -> median over workers [d] fp32."""
+    W, d = xs.shape
+    Wp = max(8, -(-W // 8) * 8)
+    bd = min(block_d, max(128, -(-d // 128) * 128))
+    bd = -(-bd // 128) * 128
+    dp = -(-d // bd) * bd
+    x = jnp.full((Wp, dp), jnp.inf, jnp.float32).at[:W, :d].set(
+        xs.astype(jnp.float32)
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_median_kernel, W=W),
+        grid=(dp // bd,),
+        in_specs=[pl.BlockSpec((Wp, bd), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((1, bd), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[0, :d]

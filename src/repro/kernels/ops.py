@@ -1,0 +1,85 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute their bodies in
+Python/XLA on CPU — this is how the container validates them); on a real TPU
+backend the same calls lower through Mosaic.
+
+The composed aggregators here are the kernel-accelerated counterparts of
+``repro.core.aggregators`` (oracles in ``ref.py``; equivalence is asserted
+in tests/test_kernels.py):
+
+  gram(xs)                    stats phase for Krum / RFA / CCLIP
+  cm_aggregate(xs)            full coordinate-wise median
+  mix_apply(M, xs)            bucketing / resampling application
+  rfa_aggregate(xs)           smoothed Weiszfeld via fused residual-norm passes
+  cclip_aggregate(xs, tau)    centered clipping via norms+combine passes
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_mix import bucket_mix
+from repro.kernels.cclip_combine import cclip_combine
+from repro.kernels.cwise_median import cwise_median
+from repro.kernels.pairwise_gram import pairwise_gram
+from repro.kernels.weiszfeld_norms import residual_norms
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram(xs: jnp.ndarray, *, block_d: int = 2048) -> jnp.ndarray:
+    return pairwise_gram(xs, block_d=block_d, interpret=_interp())
+
+
+def cm_aggregate(xs: jnp.ndarray, *, block_d: int = 1024) -> jnp.ndarray:
+    return cwise_median(xs, block_d=block_d, interpret=_interp())
+
+
+def mix_apply(mix: jnp.ndarray, xs: jnp.ndarray, *, block_d: int = 2048) -> jnp.ndarray:
+    return bucket_mix(mix, xs, block_d=block_d, interpret=_interp())
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block_d"))
+def rfa_aggregate(xs: jnp.ndarray, *, n_iters: int = 8, eps: float = 1e-6,
+                  block_d: int = 2048) -> jnp.ndarray:
+    """Geometric median of worker rows via kernel-fused Weiszfeld."""
+    W = xs.shape[0]
+    interp = _interp()
+
+    def body(c, _):
+        r2 = residual_norms(xs, c, block_d=block_d, interpret=interp)
+        w = 1.0 / jnp.sqrt(r2 + eps**2)
+        return w / jnp.sum(w), None
+
+    c0 = jnp.full((W,), 1.0 / W, jnp.float32)
+    c, _ = jax.lax.scan(body, c0, None, length=n_iters)
+    return mix_apply(c[None, :], xs, block_d=block_d)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block_d"))
+def cclip_aggregate(xs: jnp.ndarray, tau: float, *, n_iters: int = 3,
+                    eps: float = 1e-12, block_d: int = 2048) -> jnp.ndarray:
+    """Centered clipping: norms pass + fused combine pass per iteration."""
+    W = xs.shape[0]
+    interp = _interp()
+    v = mix_apply(jnp.full((1, W), 1.0 / W, jnp.float32), xs, block_d=block_d)[0]
+
+    def body(v, _):
+        # residual norms against an explicit v: append v as a pseudo-row
+        diffs2 = residual_norms(
+            jnp.concatenate([xs.astype(jnp.float32), v[None, :]], axis=0),
+            jnp.zeros((W + 1,), jnp.float32).at[W].set(1.0),
+            block_d=block_d, interpret=interp,
+        )[:W]
+        lam = jnp.minimum(1.0, tau / jnp.sqrt(diffs2 + eps))
+        v_new = cclip_combine(xs, v, lam, block_d=block_d, interpret=interp)
+        return v_new, None
+
+    v, _ = jax.lax.scan(body, v, None, length=n_iters)
+    return v

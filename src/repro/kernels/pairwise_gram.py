@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: worker Gram matrix ``G[i,j] = <x_i, x_j>``.
+
+The stats phase of Krum / RFA / CCLIP (DESIGN.md §4) is a rank-``d``
+reduction of outer products — a natural MXU workload. The parameter
+dimension is tiled into VMEM-resident ``[W, bd]`` blocks (``bd`` a multiple
+of 128 so the contraction dim is MXU-aligned); the tiny ``[W, W]`` fp32
+accumulator lives in the output block across the whole grid (revisited every
+step, standard Pallas accumulation pattern).
+
+HBM traffic: ``W*d`` input bytes read exactly once — the kernel is
+memory-bound (arithmetic intensity W/2 FLOPs/byte), so the roofline target
+is HBM bandwidth, which one-pass streaming achieves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, out_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_gram(xs: jnp.ndarray, *, block_d: int = 2048, interpret: bool = True):
+    """xs: [W, d] (any float dtype) -> Gram [W, W] fp32.
+
+    Pads W to a multiple of 8 (sublane) and d to a multiple of the block
+    (lane=128-aligned); zero padding contributes 0 to every inner product.
+    """
+    W, d = xs.shape
+    Wp = max(8, -(-W // 8) * 8)
+    bd = min(block_d, max(128, -(-d // 128) * 128))
+    bd = -(-bd // 128) * 128
+    dp = -(-d // bd) * bd
+    x = jnp.zeros((Wp, dp), xs.dtype).at[:W, :d].set(xs)
+
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(dp // bd,),
+        in_specs=[pl.BlockSpec((Wp, bd), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((Wp, Wp), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Wp, Wp), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:W, :W]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: per-worker residual norms ``r_i = ||x_i - c^T X||^2``.
+
+The inner loop of smoothed Weiszfeld (RFA) and of CCLIP's Gram-free form:
+given combination coefficients ``c`` for the current iterate ``v = c^T X``,
+compute every worker's squared distance to ``v`` in ONE streaming pass —
+the candidate ``v`` is formed blockwise in VMEM (``c @ x_blk``) and
+subtracted immediately, so ``v`` never round-trips to HBM. A fused
+(matvec + subtract + square + row-reduce) pass.
+
+Padding: extra worker rows are zero, producing garbage residuals that the
+wrapper slices off; extra d columns are zero in both x and v, contributing 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _resid_kernel(c_ref, x_ref, out_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # [Wp, bd]
+    c = c_ref[...].astype(jnp.float32)          # [1, Wp]
+    v = jax.lax.dot_general(                    # [1, bd]
+        c, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    diff = x - v
+    out_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True).T  # [1, Wp]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def residual_norms(xs: jnp.ndarray, coeffs: jnp.ndarray, *, block_d: int = 2048,
+                   interpret: bool = True):
+    """xs: [W, d]; coeffs: [W] -> residual sq norms [W] fp32."""
+    W, d = xs.shape
+    Wp = max(8, -(-W // 8) * 8)
+    bd = min(block_d, max(128, -(-d // 128) * 128))
+    bd = -(-bd // 128) * 128
+    dp = -(-d // bd) * bd
+    x = jnp.zeros((Wp, dp), xs.dtype).at[:W, :d].set(xs)
+    c = jnp.zeros((1, Wp), jnp.float32).at[0, :W].set(coeffs.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        _resid_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((1, Wp), lambda k: (0, 0)),
+            pl.BlockSpec((Wp, bd), lambda k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, Wp), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, Wp), jnp.float32),
+        interpret=interpret,
+    )(c, x)
+    return out[0, :W]

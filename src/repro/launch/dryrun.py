@@ -1,0 +1,321 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh) combination:
+  lower + compile the step (train_step for train shapes, forward for
+  prefill, serve_step for decode), print memory_analysis / cost_analysis,
+  and extract the roofline terms (compute / memory / collective — see
+  EXPERIMENTS.md §Roofline). Collective bytes are parsed from the compiled
+  HLO text (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute operand sizes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The 512 placeholder CPU devices exist ONLY here (set before any jax import,
+as jax locks the device count on first init). Smoke tests / benchmarks see
+the real single device.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, ByzConfig, get_config, list_archs
+from repro.configs.base import InputShape
+from repro.distributed.steps import (
+    batch_shardings,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+
+# TPU v5e hardware constants (assignment)
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9       # bytes/s per chip
+ICI_BW = 50e9        # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8, "u64": 8,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?([a-z0-9_]+(?:\([^)]*\))?[^=]*?)\s*"
+)
+
+
+def _parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[4,128]{1,0}' or a tuple."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * nbytes
+    return total
+
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in the HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^\s]+)\s+([a-z\-]+)\(", stripped)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        if opname in COLLECTIVE_OPS:
+            key = opname.replace("-start", "")
+            out[key] = out.get(key, 0) + _parse_shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll: Dict[str, int], n_chips: int):
+    t_compute = flops / (n_chips * PEAK_FLOPS)
+    t_memory = bytes_hbm / (n_chips * HBM_BW)
+    total_coll = float(sum(coll.values()))
+    t_coll = total_coll / (n_chips * ICI_BW)
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    terms["collective_bytes"] = total_coll
+    return terms
+
+
+def dryrun_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    byz: Optional[ByzConfig] = None,
+    verbose: bool = True,
+    overrides: Optional[dict] = None,
+    exact_costs: bool = True,
+) -> Dict:
+    """Lower + compile one (arch, shape, mesh) combination.
+
+    ``exact_costs``: XLA's cost_analysis counts a ``lax.scan`` body ONCE
+    regardless of trip count, so a depth-L model reports ~1-layer costs. We
+    correct by compiling twice (scan_unroll=1 and 2) and extrapolating:
+    cost(u) = fixed + u*period  =>  true = c1 + (n_periods-1)*(c2-c1).
+    The multi-pod sweep (which only proves lowering/sharding) skips this.
+    """
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    byz = byz or ByzConfig(
+        aggregator="rfa", mixing="bucketing", s=2, worker_momentum=0.9, delta=0.1
+    )
+
+    # --- applicability gates (DESIGN.md §6)
+    if shape.kind == "decode" and shape_name == "long_500k":
+        if cfg.long_context == "window" and cfg.long_context_window <= 0:
+            return {"skipped": "full-attention arch without window variant"}
+
+    t0 = time.time()
+    specs = input_specs(cfg, shape)
+
+    def compile_variant(cfg_v):
+        from repro.distributed.sharding import param_shardings
+
+        b_sh = batch_shardings(cfg_v, shape, mesh)
+        params_shape = jax.eval_shape(
+            lambda: tfm.init_params(cfg_v, jax.random.PRNGKey(0)))
+        params_sh = param_shardings(params_shape, mesh, fsdp=cfg_v.fsdp)
+        t_start = time.time()
+        with mesh:
+            if shape.kind == "train":
+                step_fn, sh = make_train_step(cfg_v, byz, mesh)
+                rep = sh["replicated"]
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(sh["params"], sh["opt_state"], sh["worker_m"],
+                                  rep, b_sh),
+                    out_shardings=(sh["params"], sh["opt_state"], sh["worker_m"],
+                                   rep),
+                )
+                key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+                lowered = jitted.lower(sh["params_shape"], sh["opt_shape"],
+                                       sh["wm_shape"], key_spec, specs)
+            elif shape.kind == "prefill":
+                prefill = make_prefill_step(cfg_v, mesh)
+                jitted = jax.jit(prefill, in_shardings=(params_sh, b_sh))
+                lowered = jitted.lower(params_shape, specs)
+            else:  # decode
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                serve, cache_shape, cache_sh = make_serve_step(cfg_v, mesh, shape)
+                rep = NamedSharding(mesh, P())
+                jitted = jax.jit(
+                    serve,
+                    in_shardings=(params_sh, cache_sh, b_sh["token"], rep),
+                    out_shardings=(rep, cache_sh),
+                )
+                pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+                lowered = jitted.lower(params_shape, cache_shape, specs["token"],
+                                       pos_spec)
+            t_lower = time.time() - t_start
+            t_c0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t_c0
+
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        return {
+            "compiled": compiled,
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll,
+            "t_lower": t_lower,
+            "t_compile": t_compile,
+        }
+
+    v1 = compile_variant(cfg)
+    compiled = v1["compiled"]
+    t_lower, t_compile = v1["t_lower"], v1["t_compile"]
+    flops, bytes_hbm, coll = v1["flops"], v1["bytes"], dict(v1["coll"])
+
+    # ---- scan-body cost extrapolation (see docstring)
+    n_p = cfg.n_periods
+    if exact_costs and n_p > 1:
+        import dataclasses
+        if n_p <= 8:
+            # shallow scan: full unroll is affordable and EXACT (avoids the
+            # failure mode where XLA CSE across unrolled periods makes
+            # cost(unroll=2) < cost(unroll=1) and the extrapolation negative)
+            v2 = compile_variant(dataclasses.replace(cfg, scan_unroll=n_p))
+            flops, bytes_hbm, coll = v2["flops"], v2["bytes"], dict(v2["coll"])
+        else:
+            v2 = compile_variant(dataclasses.replace(cfg, scan_unroll=2))
+            k = n_p - 1
+            if v2["flops"] >= v1["flops"]:
+                flops = v1["flops"] + k * (v2["flops"] - v1["flops"])
+                bytes_hbm = max(v1["bytes"] + k * (v2["bytes"] - v1["bytes"]),
+                                v1["bytes"])
+                keys = set(v1["coll"]) | set(v2["coll"])
+                coll = {
+                    c: max(0.0, v1["coll"].get(c, 0) +
+                           k * (v2["coll"].get(c, 0) - v1["coll"].get(c, 0)))
+                    for c in keys
+                }
+            else:  # guard: fall back to body-times-trip-count upper proxy
+                flops = v1["flops"] * n_p
+                bytes_hbm = v1["bytes"] * n_p
+                coll = {c: v * n_p for c, v in v1["coll"].items()}
+        t_lower += v2["t_lower"]
+        t_compile += v2["t_compile"]
+
+    mem = compiled.memory_analysis()
+    terms = roofline_terms(flops, bytes_hbm, coll, n_chips)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "flops": flops,
+        "bytes_hbm": bytes_hbm,
+        "collectives": coll,
+        **terms,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    try:
+        result["bytes_per_device"] = {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        result["bytes_per_device"] = str(mem)
+
+    if verbose:
+        print(f"== {arch} x {shape_name} x {result['mesh']} ({shape.kind}) ==")
+        print("memory_analysis:", result["bytes_per_device"])
+        print(
+            f"cost_analysis: flops={flops:.3e} bytes={bytes_hbm:.3e} "
+            f"collective_bytes={terms['collective_bytes']:.3e}"
+        )
+        print(
+            f"roofline: compute={terms['compute_s']*1e3:.2f}ms "
+            f"memory={terms['memory_s']*1e3:.2f}ms "
+            f"collective={terms['collective_s']*1e3:.2f}ms "
+            f"-> bottleneck: {terms['bottleneck']}"
+        )
+        print(f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", type=str, default=None)
+    ap.add_argument("--agg", type=str, default="rfa")
+    ap.add_argument("--mixing", type=str, default="bucketing")
+    args = ap.parse_args()
+
+    byz = ByzConfig(
+        aggregator=args.agg, mixing=args.mixing, s=2, worker_momentum=0.9, delta=0.1
+    )
+    results = []
+    if args.all:
+        combos = [(a, s) for a in list_archs() for s in INPUT_SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    for arch, shape in combos:
+        try:
+            results.append(dryrun_one(arch, shape, args.multi_pod, byz,
+                                      exact_costs=not args.multi_pod))
+        except Exception as e:  # noqa: BLE001 - report and continue the sweep
+            print(f"!! {arch} x {shape} FAILED: {type(e).__name__}: {e}")
+            results.append({"arch": arch, "shape": shape, "error": str(e)[:500]})
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    failed = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(failed)}/{len(results)} combinations compiled")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step"]

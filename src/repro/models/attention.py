@@ -1,0 +1,223 @@
+"""Attention: GQA with RoPE, optional QKV bias / sliding window, three impls.
+
+- ``xla``: plain einsum softmax attention (small S).
+- ``blockwise``: memory-O(S * block) online-softmax attention — a pure-JAX
+  flash-attention used for the 32k+ shapes (lax.map over query blocks,
+  lax.scan over KV blocks). Numerically identical to ``xla`` up to fp32
+  accumulation order.
+- Pallas TPU kernel (``repro.kernels.flash_attention``) is the TPU-target
+  fast path; the dry-run uses ``blockwise`` because Pallas does not lower on
+  the CPU placeholder backend.
+
+Decode path: single-token query against a (possibly windowed) KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def init_attention(key, cfg) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, kv * dh, dtype),
+        "wv": dense_init(ks[2], d, kv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h, dh)
+    k = k.reshape(B, S, kv, dh)
+    v = v.reshape(B, S, kv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B, S, KV, dh] -> [B, S, H, dh] by repeating each kv head."""
+    kv = k.shape[2]
+    rep = n_heads // kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+# -------------------------------------------------------------- full (xla)
+def _attn_xla(q, k, v, scale, causal: bool, window: int):
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# -------------------------------------------------- blockwise (flash-style)
+def _divisor_block(S: int, target: int) -> int:
+    """Largest block size <= target dividing S (handles prefix-extended
+    sequence lengths like 4096 + n_prefix that break power-of-two tiling)."""
+    b = min(target, S)
+    while S % b:
+        b -= 1
+    return b
+
+
+def _attn_blockwise(q, k, v, scale, causal: bool, window: int, bq: int, bkv: int):
+    """Online-softmax attention. q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dh]."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    bq = _divisor_block(Sq, bq)
+    bkv = _divisor_block(Sk, bkv)
+    nq, nk = Sq // bq, Sk // bkv
+    rep = H // KV
+    qpos_base = Sk - Sq  # causal offset (decode prefix)
+
+    qb = q.reshape(B, nq, bq, H, dh)
+    kb = k.reshape(B, nk, bkv, KV, dh)
+    vb = v.reshape(B, nk, bkv, KV, dh)
+
+    def one_q_block(args):
+        qi, q_blk = args  # q_blk: [B, bq, H, dh]
+        qpos = qpos_base + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, k_blk, v_blk = args2
+            kpos = ki * bkv + jnp.arange(bkv)
+            logits = (
+                jnp.einsum("bqhd,bkhd->bhqk", q_blk, jnp.repeat(k_blk, rep, axis=2))
+                .astype(jnp.float32)
+                * scale
+            )
+            mask = jnp.ones((bq, bkv), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, jnp.repeat(v_blk, rep, axis=2).astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2)  # [B, bq, H, dh]
+
+    outs = jax.lax.map(one_q_block, (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- forward
+def attention(p, x, cfg, positions, impl: Optional[str] = None) -> jnp.ndarray:
+    """Self-attention over the full sequence (train / prefill)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    scale = cfg.head_dim_ ** -0.5
+    impl = impl or cfg.attention_impl
+    if impl == "auto":
+        impl = "blockwise" if x.shape[1] > 2048 else "xla"
+    if impl == "xla":
+        out = _attn_xla(q, k, v, scale, True, cfg.sliding_window)
+    elif impl == "blockwise":
+        out = _attn_blockwise(
+            q, k, v, scale, True, cfg.sliding_window, cfg.attn_block_q, cfg.attn_block_kv
+        )
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    B, S = x.shape[:2]
+    return out.reshape(B, S, cfg.n_heads * cfg.head_dim_) @ p["wo"]
+
+
+# ----------------------------------------------------------------- decode
+@dataclasses.dataclass
+class KVCacheSpec:
+    """Static description of one attention layer's cache."""
+
+    length: int  # cache capacity (window or full seq)
+
+
+def init_kv_cache(batch: int, length: int, cfg, dtype) -> dict:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, length, kv, dh), dtype),
+        "v": jnp.zeros((batch, length, kv, dh), dtype),
+    }
+
+
+def decode_attention(p, x, cache, cfg, position) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x: [B, 1, D]; cache k/v: [B, L, KV, dh];
+    position: scalar int32 — the absolute position of the new token.
+
+    The cache is a ring buffer of capacity L: slot = position % L. Attention
+    masks out unwritten (future-of-window) slots via per-slot positions.
+    """
+    B = x.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    L = cache["k"].shape[1]
+    pos_arr = jnp.full((B, 1), position, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos_arr)
+
+    slot = jnp.mod(position, L)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+
+    # absolute position held in each ring slot (<= position, stride L)
+    idx = jnp.arange(L)
+    slot_pos = position - jnp.mod(position - idx, L)
+    valid = slot_pos >= 0
+    if cfg.sliding_window > 0:
+        valid &= slot_pos > position - cfg.sliding_window
+
+    scale = dh**-0.5
+    k_e = _expand_kv(k, h)
+    v_e = _expand_kv(v, h)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_e).astype(jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_e)
+    out = out.reshape(B, 1, h * dh) @ p["wo"]
+    return out, {"k": k, "v": v}

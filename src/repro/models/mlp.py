@@ -1,0 +1,84 @@
+"""The paper's MNIST worker model.
+
+The paper's §6 trains "an MLP on a heterogeneous version of MNIST"; we use a
+784-128-10 ReLU MLP with NLL loss (the CNN of App. Table 5 is available as
+``init_cnn``/``cnn_apply`` but the MLP is the benchmark default — far faster
+on the CPU-only container and exhibiting the same aggregation phenomena).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, sizes: Sequence[int] = (784, 128, 10)) -> Dict:
+    params = {}
+    keys = jax.random.split(key, len(sizes) - 1)
+    for i, (d_in, d_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        w_key, _ = jax.random.split(keys[i])
+        params[f"w{i}"] = jax.random.normal(w_key, (d_in, d_out)) * (2.0 / d_in) ** 0.5
+        params[f"b{i}"] = jnp.zeros((d_out,))
+    return params
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, 784] -> logits [B, 10]."""
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def nll_loss(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logits = mlp_apply(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def accuracy(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(mlp_apply(params, x), axis=-1) == y).astype(jnp.float32))
+
+
+# ------------------------------------------------- optional CNN (Table 5)
+def init_cnn(key, scale: int = 1) -> Dict:
+    """CONV-CONV-(dropout)-FC-(dropout)-FC; `scale` multiplies channel widths
+    (the App. A.2.3 overparameterization knob)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, c2, f1 = 8 * scale, 16 * scale, 64 * scale
+    return {
+        "conv1": jax.random.normal(k1, (3, 3, 1, c1)) * 0.1,
+        "conv2": jax.random.normal(k2, (3, 3, c1, c2)) * 0.1,
+        "fc1": jax.random.normal(k3, (c2 * 49, f1)) * (1.0 / (c2 * 49)) ** 0.5,
+        "b1": jnp.zeros((f1,)),
+        "fc2": jax.random.normal(k4, (f1, 10)) * (1.0 / f1) ** 0.5,
+        "b2": jnp.zeros((10,)),
+    }
+
+
+def cnn_apply(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, 784] (reshaped internally to 28x28)."""
+    B = x.shape[0]
+    h = x.reshape(B, 28, 28, 1)
+    for name in ("conv1", "conv2"):
+        h = jax.lax.conv_general_dilated(
+            h, params[name], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    h = h.reshape(B, -1)
+    h = jax.nn.relu(h @ params["fc1"] + params["b1"])
+    return h @ params["fc2"] + params["b2"]
+
+
+def cnn_nll_loss(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logits = cnn_apply(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))

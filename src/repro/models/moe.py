@@ -1,0 +1,127 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Design (TPU-native, expert-parallel friendly):
+
+1. router top-k per token;
+2. flatten the ``T*k`` (token, expert) assignments, argsort by expert id;
+3. position-within-expert from bincount prefix sums; assignments beyond the
+   per-expert capacity ``C = ceil(k*T/E * capacity_factor)`` are dropped
+   (scatter ``mode="drop"``);
+4. one batched einsum over the ``[E, C, D]`` buffer against stacked expert
+   weights ``[E, D, F]`` — this is the MXU-shaped grouped matmul, and the
+   ``E`` axis is what shards over the 'model' mesh axis (expert parallelism;
+   GSPMD turns the scatter/gather into all-to-alls);
+5. gather back and combine with the (renormalized) router gates.
+
+This avoids the O(T*E*C) one-hot dispatch tensors of the classic
+Shazeer-style implementation, which do not fit at the assigned shapes
+(kimi-k2: T=32k/worker, E=384 => 32 GB per layer).
+
+Aux losses: switch-style load-balance loss and router z-loss, returned for
+logging/regularization.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp_block, mlp_block
+
+
+def init_moe(key, cfg) -> dict:
+    d = cfg.d_model
+    fe = cfg.d_ff_expert or cfg.d_ff
+    e = cfg.n_experts
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2 + cfg.n_shared_experts)
+    n_mats = {"swiglu": 3, "geglu": 3, "gelu": 2}[cfg.mlp_kind]
+
+    def stacked(key, d_in, d_out):
+        kk = jax.random.split(key, e)
+        return jnp.stack([dense_init(k, d_in, d_out, dtype) for k in kk])
+
+    # stacked expert weights [E, D, F] / [E, F, D]
+    ks_e = jax.random.split(ks[1], 3)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "w_up": stacked(ks_e[0], d, fe),
+        "w_down": stacked(ks_e[1], fe, d),
+    }
+    if n_mats == 3:
+        p["w_gate"] = stacked(ks_e[2], d, fe)
+    for i in range(cfg.n_shared_experts):
+        p[f"shared_{i}"] = init_mlp_block(ks[2 + i], d, fe, cfg.mlp_kind, dtype)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg) -> int:
+    c = math.ceil(cfg.experts_per_token * n_tokens / cfg.n_experts * cfg.capacity_factor)
+    return max(8, min(c, n_tokens))
+
+
+def moe_layer(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
+    """x: [B, S, D] -> (out [B, S, D], aux dict with losses)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.experts_per_token
+    C = expert_capacity(T, cfg)
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [T, E]
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_topk, idx_topk = jax.lax.top_k(gates_all, K)  # [T, K]
+    gate_topk = gate_topk / jnp.sum(gate_topk, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch
+    flat_e = idx_topk.reshape(-1)  # [T*K]
+    flat_g = gate_topk.reshape(-1)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * K) - starts[sorted_e]
+    keep = pos < C
+    write_pos = jnp.where(keep, pos, C)  # OOB => dropped by scatter mode
+    tok_of = order // K
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[sorted_e, write_pos].set(xt[tok_of], mode="drop")
+
+    # ---- expert compute (grouped matmul over stacked weights)
+    if "w_gate" in p:
+        act_fn = jax.nn.silu if cfg.mlp_kind == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True)
+        )
+        act = act_fn(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+            "ecd,edf->ecf", buf, p["w_up"]
+        )
+    else:
+        act = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]), approximate=True)
+    out_buf = jnp.einsum("ecf,efd->ecd", act, p["w_down"])  # [E, C, D]
+
+    # ---- gather + gate-combine back to tokens
+    gathered = out_buf[sorted_e, jnp.minimum(write_pos, C - 1)]  # [T*K, D]
+    gathered = gathered * (keep[:, None] * flat_g[order][:, None]).astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[tok_of].add(gathered)
+
+    # ---- shared experts (always-on, kimi-style)
+    for i in range(cfg.n_shared_experts):
+        out = out + mlp_block(p[f"shared_{i}"], xt, cfg.mlp_kind)
+
+    # ---- aux losses
+    # switch load-balance: E * sum_e f_e * P_e
+    f_e = counts.astype(jnp.float32) / (T * K)
+    p_e = jnp.mean(gates_all, axis=0)
+    lb_loss = E * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.sum(keep) / (T * K)
+    aux = {
+        "moe_lb_loss": lb_loss,
+        "moe_z_loss": z_loss,
+        "moe_drop_frac": dropped,
+    }
+    return out.reshape(B, S, D), aux

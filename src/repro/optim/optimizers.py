@@ -1,0 +1,116 @@
+"""Hand-rolled optimizers (no optax in the offline container).
+
+Both return ``(new_params, new_state)`` and keep their state as plain
+pytrees so the distributed runtime can shard them like parameters. SGD-M is
+the framework default for Byzantine training (it is Algorithm 2's server-
+side update when worker momentum is active, and the Remark-7 server
+momentum otherwise); AdamW is provided for standard LLM pretraining runs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any  # first moment / momentum
+    v: Any  # second moment (None for sgdm)
+
+
+# ------------------------------------------------------------------ SGD-M
+def sgdm_init(params, m_dtype=jnp.float32) -> OptState:
+    """``m_dtype``: momentum storage dtype. bfloat16 halves optimizer-state
+    HBM (the fit-enabling lever for the 1T kimi-k2 config — DESIGN.md §5);
+    the update still accumulates in fp32."""
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, m_dtype), params),
+        v=None,
+    )
+
+
+def sgdm_update(
+    grads, state: OptState, params, lr: float, beta: float = 0.9, weight_decay: float = 0.0
+) -> Tuple[Any, OptState]:
+    m = jax.tree_util.tree_map(
+        lambda mi, g: (beta * mi.astype(jnp.float32) + g.astype(jnp.float32))
+        .astype(mi.dtype),
+        state.m,
+        grads,
+    )
+    def upd(p, mi):
+        delta = lr * mi.astype(jnp.float32)
+        if weight_decay:
+            delta = delta + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+    new_params = jax.tree_util.tree_map(upd, params, m)
+    return new_params, OptState(state.step + 1, m, None)
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    lr: float,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    m = jax.tree_util.tree_map(
+        lambda mi, g: beta1 * mi + (1 - beta1) * g.astype(jnp.float32), state.m, grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda vi, g: beta2 * vi + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+        state.v,
+        grads,
+    )
+
+    def upd(p, mi, vi):
+        delta = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        if weight_decay:
+            delta = delta + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, OptState(step, m, v)
+
+
+def make_optimizer(name: str, **hp) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(params), update_fn(grads, state, params) -> (params, state))."""
+    name = name.lower()
+    m_dtype = jnp.dtype(hp.get("m_dtype", "float32"))
+    if name in ("sgdm", "sgd"):
+        beta = hp.get("beta1", 0.9) if name == "sgdm" else 0.0
+        def init(params):
+            return sgdm_init(params, m_dtype=m_dtype)
+        def update(g, s, p, lr=hp.get("lr", 1e-3)):
+            return sgdm_update(g, s, p, lr, beta, hp.get("weight_decay", 0.0))
+        return init, update
+    if name == "adamw":
+        def update(g, s, p, lr=hp.get("lr", 1e-3)):
+            return adamw_update(
+                g, s, p, lr,
+                hp.get("beta1", 0.9), hp.get("beta2", 0.95),
+                hp.get("eps", 1e-8), hp.get("weight_decay", 0.0),
+            )
+        return adamw_init, update
+    raise KeyError(f"unknown optimizer {name!r}")

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (plain callables step -> lr)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(lr: float, total_steps: int, min_frac: float = 0.1) -> Callable:
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * t)))
+
+    return f
+
+
+def warmup_cosine_lr(
+    lr: float, total_steps: int, warmup_steps: int = 100, min_frac: float = 0.1
+) -> Callable:
+    cos = cosine_lr(lr, max(total_steps - warmup_steps, 1), min_frac)
+
+    def f(step):
+        warm = lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return f

@@ -1,0 +1,5 @@
+"""Serving runtime: slot-based continuous batching over ``decode_step``."""
+
+from repro.serving.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,172 @@
+"""Slot-based continuous-batching serving engine.
+
+The decode path (``repro.models.transformer.decode_step``) is a fixed-batch
+jitted step: caches are ``[B, ...]`` arrays. A production server cannot
+re-jit per request mix, so this engine manages B **slots**:
+
+- incoming requests are queued and admitted into free slots;
+- each engine ``step()`` decodes ONE token for every active slot (inactive
+  slots decode garbage that is ignored — the usual static-batch trick);
+- per-slot position counters drive prompt-feeding (prefill runs through the
+  same decode step, token by token) and completion detection;
+- finished slots return their output and become free for the next queued
+  request — i.e. continuous batching at slot granularity.
+
+Cache isolation between consecutive requests in the same slot comes from
+positional masking: attention masks ring-buffer slots with
+``slot_pos > position`` invalid, and the SSM/conv states are zeroed via the
+per-slot reset mask.
+
+This is deliberately mesh-agnostic: under a mesh, ``decode_step`` is the
+same jitted function the dry-run lowers for decode_32k/long_500k, with the
+cache sharded by ``cache_shardings``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]            # token ids ([K][S] lists for codebooks)
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled on completion:
+    output: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                 # next absolute position to feed
+    generated: Optional[list] = None
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, batch_slots: int = 4, max_len: int = 256,
+                 sample: str = "greedy"):
+        assert not cfg.n_codebooks, "engine currently serves plain-LM archs"
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.sample = sample
+        self.cache = tfm.init_cache(cfg, batch_slots, max_len)
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: deque[Request] = deque()
+        self.finished: Dict[int, Request] = {}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tfm.decode_step(p, cfg, c, t, pos)
+        )
+        self._zero_cache = jax.jit(self._make_zero_cache)
+
+    # ------------------------------------------------------------- plumbing
+    @staticmethod
+    def _make_zero_cache(cache, slot_mask):
+        """Zero the cache rows of slots in ``slot_mask`` (new admissions)."""
+        def one(leaf):
+            # leaf: [period, B, ...]; mask over B
+            shape = [1, leaf.shape[1]] + [1] * (leaf.ndim - 2)
+            m = slot_mask.reshape(shape)
+            return jnp.where(m, jnp.zeros_like(leaf), leaf)
+
+        return jax.tree_util.tree_map(one, cache)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        newly = jnp.zeros((self.B,), bool)
+        any_new = False
+        for i, slot in enumerate(self.slots):
+            if not slot.active and self.queue:
+                req = self.queue.popleft()
+                assert len(req.prompt) + req.max_new_tokens <= self.max_len, (
+                    "request exceeds engine max_len")
+                self.slots[i] = _Slot(req=req, pos=0, generated=[])
+                newly = newly.at[i].set(True)
+                any_new = True
+        if any_new:
+            # positional masking isolates attention; recurrent (SSM/conv)
+            # state needs an explicit reset.
+            self.cache = self._zero_cache(self.cache, newly)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> None:
+        """Admit queued requests and decode one token for every active slot."""
+        self._admit()
+        if not any(s.active for s in self.slots):
+            return
+
+        # Slots can be at different positions; the jitted step takes ONE
+        # position scalar, so we step the minimum-position cohort. Slots at
+        # other positions feed a pad token and ignore the output — position
+        # masking keeps their caches untouched beyond slot `pos` bookkeeping
+        # only for the stepped cohort.
+        active_pos = [s.pos for s in self.slots if s.active]
+        pos = min(active_pos)
+
+        toks = []
+        stepped = []
+        for s in self.slots:
+            if s.active and s.pos == pos:
+                req = s.req
+                if s.pos < len(req.prompt):
+                    toks.append(req.prompt[s.pos])
+                else:
+                    toks.append(s.generated[-1])
+                stepped.append(True)
+            else:
+                toks.append(0)
+                stepped.append(False)
+
+        logits, new_cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32))
+
+        # non-stepped slots must keep their cache rows (they were written
+        # at `pos` with garbage): restore from the old cache.
+        keep = jnp.asarray(stepped)
+
+        def merge(new, old):
+            shape = [1, new.shape[1]] + [1] * (new.ndim - 2)
+            m = keep.reshape(shape)
+            return jnp.where(m, new, old)
+
+        self.cache = jax.tree_util.tree_map(merge, new_cache, self.cache)
+
+        nxt = jnp.argmax(logits, axis=-1)  # greedy
+        for i, s in enumerate(self.slots):
+            if not (s.active and stepped[i]):
+                continue
+            s.pos += 1
+            req = s.req
+            if s.pos >= len(req.prompt):  # we just consumed prompt/gen token
+                tok = int(nxt[i])
+                s.generated.append(tok)
+                done = (len(s.generated) >= req.max_new_tokens
+                        or (req.eos_id is not None and tok == req.eos_id))
+                if done:
+                    req.output = list(s.generated[:req.max_new_tokens])
+                    self.finished[req.uid] = req
+                    self.slots[i] = _Slot()
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.queue and not any(s.active for s in self.slots):
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,161 @@
+"""Byzantine-robust training loop (Algorithm 2) — simulation path.
+
+Simulates ``n`` workers on one host: per-worker gradients via ``vmap``,
+worker momentum, message-level attacks, mixing + robust aggregation, server
+update. Workers ``[0, f)`` are Byzantine (convention used by the attack
+masks and the partitioner).
+
+The distributed path (workers = mesh DP groups) lives in
+``repro/distributed/robust_sync.py`` and reuses the same aggregator objects.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ByzConfig
+from repro.core.attacks import get_attack
+from repro.data.pipeline import sample_worker_batches
+
+
+class SimState(NamedTuple):
+    params: Any
+    momentum: jnp.ndarray          # [W, d] worker momentum (flattened)
+    attack_state: Any
+    step: jnp.ndarray
+
+
+def stack_flatten_workers(tree) -> jnp.ndarray:
+    """Stacked grad tree (leaves [W, ...]) -> [W, d]."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    W = leaves[0].shape[0]
+    return jnp.concatenate([x.reshape(W, -1) for x in leaves], axis=1)
+
+
+def unflatten_like(vec: jnp.ndarray, tree) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for leaf in leaves:
+        size = leaf.size
+        out.append(vec[off : off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass(eq=False)  # identity hash => usable as a jit static arg
+class ByzantineSim:
+    """Paper-experiment harness.
+
+    Args:
+        loss_fn: (params, x, y) -> scalar loss for ONE worker batch.
+        byz: ByzConfig (aggregator, mixing, attack, momentum, delta ...).
+        n_workers: total workers n.
+        n_byzantine: f (workers [0, f) are Byzantine).
+        lr: server step size eta.
+        batch_size: per-worker batch size.
+    """
+
+    loss_fn: Callable
+    byz: ByzConfig
+    n_workers: int
+    n_byzantine: int
+    lr: float = 0.01
+    batch_size: int = 32
+
+    def __post_init__(self):
+        self.aggregator = self.byz.make_aggregator(self.n_workers)
+        self.attack = get_attack(self.byz.attack, **dict(self.byz.attack_kwargs))
+        self.byz_mask = jnp.arange(self.n_workers) < self.n_byzantine
+        self.grad_fn = jax.grad(self.loss_fn)
+
+    # ------------------------------------------------------------- states
+    def init_state(self, params) -> SimState:
+        d = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        return SimState(
+            params=params,
+            momentum=jnp.zeros((self.n_workers, d), jnp.float32),
+            attack_state=self.attack.init_state(self.n_workers, d),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    # --------------------------------------------------------------- step
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: SimState, data_x, data_y, key) -> Tuple[SimState, Dict]:
+        k_batch, k_agg = jax.random.split(key)
+        bx, by = sample_worker_batches(k_batch, data_x, data_y, self.batch_size)
+
+        # per-worker gradients (vmap over the worker axis)
+        grads = jax.vmap(self.grad_fn, in_axes=(None, 0, 0))(state.params, bx, by)
+        g_flat = stack_flatten_workers(grads).astype(jnp.float32)  # [W, d]
+
+        # worker momentum (Algorithm 2); step 0 initializes m = g
+        beta = self.byz.worker_momentum
+        if self.byz.momentum_convention == "ema":
+            m_upd = beta * state.momentum + (1.0 - beta) * g_flat
+        else:  # pytorch
+            m_upd = beta * state.momentum + g_flat
+        m = jnp.where(state.step == 0, g_flat, m_upd)
+
+        # message-level attack on the stacked momenta
+        sent, attack_state = self.attack(m, self.byz_mask, state.attack_state, key=k_agg)
+
+        # mixing + robust aggregation
+        agg = self.aggregator(sent, key=k_agg)
+
+        # server update
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) - self.lr * u).astype(p.dtype),
+            state.params,
+            unflatten_like(agg, state.params),
+        )
+
+        metrics = {
+            "grad_norm_mean": jnp.mean(jnp.linalg.norm(g_flat, axis=1)),
+            "agg_norm": jnp.linalg.norm(agg),
+            "zeta_sq": jnp.mean(
+                jnp.sum(
+                    jnp.square(
+                        g_flat[self.n_byzantine:]
+                        - jnp.mean(g_flat[self.n_byzantine:], axis=0, keepdims=True)
+                    ),
+                    axis=1,
+                )
+            ),
+        }
+        return (
+            SimState(new_params, m, attack_state, state.step + 1),
+            metrics,
+        )
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        params0,
+        data_x,
+        data_y,
+        n_steps: int,
+        key,
+        eval_fn: Optional[Callable] = None,
+        eval_every: int = 50,
+    ) -> Tuple[SimState, Dict[str, list]]:
+        state = self.init_state(params0)
+        history: Dict[str, list] = {"step": [], "eval": [], "zeta_sq": []}
+        for t in range(n_steps):
+            key, sub = jax.random.split(key)
+            state, metrics = self.step(state, data_x, data_y, sub)
+            if eval_fn is not None and ((t + 1) % eval_every == 0 or t == n_steps - 1):
+                history["step"].append(t + 1)
+                history["eval"].append(float(eval_fn(state.params)))
+                history["zeta_sq"].append(float(metrics["zeta_sq"]))
+        return state, history
+
+
+def label_flip_targets(y: jnp.ndarray, n_classes: int = 10) -> jnp.ndarray:
+    """The paper's label-flipping transform T(y) = 9 - y (data-level attack:
+    apply to the Byzantine workers' dataset rows before training)."""
+    return (n_classes - 1) - y

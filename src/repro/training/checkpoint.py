@@ -1,0 +1,85 @@
+"""Minimal dependency-free pytree checkpointing (npz + JSON manifest).
+
+Layout:  <dir>/step_<N>/arrays.npz  +  <dir>/step_<N>/manifest.json
+
+The manifest stores the flattened key paths and dtypes so restore rebuilds
+the exact pytree structure. Works for params, optimizer state, and the
+Byzantine trainer's momentum/attack state alike.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16 &c) do not survive npz
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and os.path.isdir(os.path.join(directory, d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like_tree: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten_with_paths(like_tree)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(like_tree)[0]]
+    keys = [
+        "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        for path in paths
+    ]
+    new_leaves = [
+        np.asarray(data[k]).astype(np.asarray(l).dtype) for k, l in zip(keys, leaves_like)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

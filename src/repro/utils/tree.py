@@ -1,0 +1,81 @@
+"""Pytree arithmetic helpers used throughout the framework.
+
+These are deliberately tiny, jit-friendly wrappers over ``jax.tree_util`` so
+that optimizer / aggregator code reads like vector algebra.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, scalar):
+    return jax.tree_util.tree_map(lambda x: x * scalar, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Global dot product across all leaves (fp32 accumulation)."""
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return sum(
+        jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def tree_global_norm(tree):
+    """Global L2 norm across all leaves (fp32 accumulation)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in the tree (static)."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_stack_flat(tree):
+    """Flatten every leaf and concatenate into a single 1-D vector.
+
+    Returns (vector, unflatten_fn). Used by the *simulation* path where the
+    whole model fits on one host; the distributed path never materializes
+    this (see repro.distributed.robust_sync).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [x.shape for x in leaves]
+    sizes = [int(jnp.size(x)) for x in leaves]
+    flat = jnp.concatenate([jnp.ravel(x) for x in leaves]) if leaves else jnp.zeros((0,))
+
+    def unflatten(vec):
+        out, off = [], 0
+        for shape, size in zip(shapes, sizes):
+            out.append(jnp.reshape(vec[off : off + size], shape))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def tree_unstack_flat(vec, like_tree):
+    """Inverse of tree_stack_flat given a template tree."""
+    _, unflatten = tree_stack_flat(like_tree)
+    return unflatten(vec)

@@ -1,0 +1,188 @@
+"""Unit tests for the robust aggregation rules (stacked + Gram-space forms)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import (
+    CenteredClip,
+    CoordinateWiseMedian,
+    Krum,
+    Mean,
+    RFA,
+    TrimmedMean,
+    get_aggregator,
+)
+
+
+def _good_cluster(key, n_good, n_byz, d=32, spread=0.1, byz_val=100.0):
+    """n_good points near a known mean + n_byz far outliers (byz rows first)."""
+    mu = jnp.linspace(-1.0, 1.0, d)
+    good = mu + spread * jax.random.normal(key, (n_good, d))
+    byz = jnp.full((n_byz, d), byz_val)
+    return jnp.concatenate([byz, good], axis=0), jnp.mean(good, axis=0)
+
+
+# ------------------------------------------------------------------- mean
+def test_mean_is_average(key):
+    xs = jax.random.normal(key, (7, 11))
+    np.testing.assert_allclose(Mean().aggregate(xs), jnp.mean(xs, 0), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- krum
+def test_krum_rejects_outlier(key):
+    xs, good_mean = _good_cluster(key, n_good=9, n_byz=2)
+    out = Krum(n_byzantine=2).aggregate(xs)
+    assert jnp.linalg.norm(out - good_mean) < 1.0
+    # and it selected one of the good rows exactly
+    assert any(jnp.allclose(out, xs[i]) for i in range(2, 11))
+
+
+def test_krum_selected_index_is_good(key):
+    xs, _ = _good_cluster(key, n_good=9, n_byz=2)
+    idx = int(Krum(n_byzantine=2).selected_index(xs))
+    assert idx >= 2  # byzantine rows are [0, 2)
+
+
+def test_multi_krum_averages_m_rows(key):
+    xs, good_mean = _good_cluster(key, n_good=9, n_byz=2)
+    out = Krum(n_byzantine=2, m=3).aggregate(xs)
+    assert jnp.linalg.norm(out - good_mean) < 1.0
+
+
+# --------------------------------------------------------------------- cm
+def test_cm_is_coordinatewise_median(key):
+    xs = jax.random.normal(key, (9, 17))
+    np.testing.assert_allclose(
+        CoordinateWiseMedian().aggregate(xs), jnp.median(xs, axis=0), rtol=1e-6
+    )
+
+
+def test_cm_robust_to_large_outliers(key):
+    xs, good_mean = _good_cluster(key, n_good=9, n_byz=2, byz_val=1e6)
+    out = CoordinateWiseMedian().aggregate(xs)
+    assert jnp.linalg.norm(out - good_mean) < 1.0
+
+
+# --------------------------------------------------------------------- tm
+def test_trimmed_mean_drops_extremes(key):
+    xs, good_mean = _good_cluster(key, n_good=9, n_byz=2, byz_val=1e6)
+    out = TrimmedMean(n_trim=2).aggregate(xs)
+    assert jnp.linalg.norm(out - good_mean) < 1.0
+
+
+def test_trimmed_mean_zero_trim_is_mean(key):
+    xs = jax.random.normal(key, (6, 5))
+    np.testing.assert_allclose(
+        TrimmedMean(n_trim=0).aggregate(xs), jnp.mean(xs, 0), rtol=1e-5
+    )
+
+
+# -------------------------------------------------------------------- rfa
+def test_rfa_close_to_geometric_median(key):
+    xs, good_mean = _good_cluster(key, n_good=19, n_byz=4, byz_val=50.0)
+    out = RFA(n_iters=16).aggregate(xs)
+    # geometric median of 19 tight + 4 far points stays near the cluster
+    assert jnp.linalg.norm(out - good_mean) < 1.0
+
+
+def test_rfa_exact_on_identical_inputs(key):
+    x = jax.random.normal(key, (8,))
+    xs = jnp.broadcast_to(x, (5, 8))
+    np.testing.assert_allclose(RFA().aggregate(xs), x, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ cclip
+def test_cclip_limits_outlier_influence(key):
+    """CCLIP starts from the mean (its v0) and iterates clipped corrections;
+    with a sane radius it converges near the good mean while plain averaging
+    stays biased by delta * byz_val."""
+    xs, good_mean = _good_cluster(key, n_good=9, n_byz=2, byz_val=10.0)
+    out_clip = CenteredClip(tau=1.0, n_iters=30).aggregate(xs)
+    out_mean = jnp.mean(xs, axis=0)
+    # clipping pulls the aggregate far closer to the good mean than averaging
+    assert jnp.linalg.norm(out_clip - good_mean) < 0.3 * jnp.linalg.norm(
+        out_mean - good_mean
+    )
+
+
+def test_cclip_large_tau_equals_mean(key):
+    xs = jax.random.normal(key, (6, 12))
+    np.testing.assert_allclose(
+        CenteredClip(tau=1e9, n_iters=3).aggregate(xs), jnp.mean(xs, 0),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+# ------------------------------------------ stacked == Gram-space equivalence
+@pytest.mark.parametrize("name,kwargs", [
+    ("mean", {}),
+    ("krum", {"n_byzantine": 2}),
+    ("rfa", {}),
+    ("cclip", {"tau": 2.0}),
+])
+def test_gram_space_matches_stacked(key, name, kwargs):
+    xs = jax.random.normal(key, (11, 23)) * 2.0
+    agg = get_aggregator(name, **kwargs)
+    stacked = agg.aggregate(xs)
+    gram = xs @ xs.T
+    w = agg.coeffs(gram)
+    via_gram = w @ xs
+    np.testing.assert_allclose(stacked, via_gram, rtol=2e-4, atol=2e-5)
+
+
+def test_registry_unknown_raises():
+    with pytest.raises(KeyError):
+        get_aggregator("nope")
+
+
+# ----------------------------------------------------- acclip (beyond-paper)
+def test_acclip_scale_invariant(key):
+    """The adaptive radius makes ACClip exactly scale-equivariant — the
+    agnosticity property fixed-tau CCLIP lacks (paper §6.4 open problem)."""
+    from repro.core.aggregators.cclip import AdaptiveCenteredClip
+
+    xs, _ = _good_cluster(key, n_good=9, n_byz=2, byz_val=30.0)
+    agg = AdaptiveCenteredClip(n_iters=5)
+    out = agg.aggregate(xs)
+    out_scaled = agg.aggregate(1000.0 * xs)
+    np.testing.assert_allclose(out_scaled, 1000.0 * out, rtol=1e-4)
+
+    # fixed-tau CCLIP is NOT scale equivariant (radius stops binding)
+    fixed = CenteredClip(tau=1.0, n_iters=5)
+    bad = fixed.aggregate(1000.0 * xs)
+    assert not np.allclose(bad, 1000.0 * fixed.aggregate(xs), rtol=1e-2)
+
+
+def test_acclip_robust_across_scales(key):
+    """ACClip stays near the good mean for outliers at any magnitude,
+    with NO tuning."""
+    from repro.core.aggregators.cclip import AdaptiveCenteredClip
+
+    agg = AdaptiveCenteredClip(n_iters=10)
+    for byz_val in (10.0, 1e3, 1e6):
+        xs, good_mean = _good_cluster(key, n_good=9, n_byz=2, byz_val=byz_val)
+        out = agg.aggregate(xs)
+        err = float(jnp.linalg.norm(out - good_mean))
+        err_mean = float(jnp.linalg.norm(jnp.mean(xs, 0) - good_mean))
+        assert err < 0.05 * err_mean, (byz_val, err, err_mean)
+
+
+def test_acclip_unanimity(key):
+    from repro.core.aggregators.cclip import AdaptiveCenteredClip
+
+    x = jax.random.normal(key, (16,))
+    xs = jnp.broadcast_to(x, (7, 16))
+    np.testing.assert_allclose(
+        AdaptiveCenteredClip().aggregate(xs), x, rtol=1e-5, atol=1e-6)
+
+
+def test_acclip_gram_matches_stacked(key):
+    from repro.core.aggregators.cclip import AdaptiveCenteredClip
+
+    xs = jax.random.normal(key, (11, 23)) * 2.0
+    agg = AdaptiveCenteredClip(n_iters=4)
+    gram = xs @ xs.T
+    np.testing.assert_allclose(
+        agg.aggregate(xs), agg.coeffs(gram) @ xs, rtol=2e-4, atol=2e-5)

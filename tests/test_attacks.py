@@ -1,0 +1,108 @@
+"""Attack implementations (§3.2, §6.2, App. B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import (
+    ALIE,
+    IPM,
+    BitFlipping,
+    Mimic,
+    MimicFixed,
+    NoAttack,
+    alie_z,
+    get_attack,
+    good_mean,
+    good_std,
+)
+
+
+def _setup(key, n=10, f=3, d=16):
+    xs = jax.random.normal(key, (n, d))
+    mask = jnp.arange(n) < f
+    return xs, mask
+
+
+def test_no_attack_identity(key):
+    xs, mask = _setup(key)
+    out, _ = NoAttack()(xs, mask)
+    np.testing.assert_array_equal(out, xs)
+
+
+def test_bitflip_negates_byzantine_rows(key):
+    xs, mask = _setup(key)
+    out, _ = BitFlipping()(xs, mask)
+    np.testing.assert_array_equal(out[:3], -xs[:3])
+    np.testing.assert_array_equal(out[3:], xs[3:])
+
+
+def test_ipm_sends_scaled_negative_good_mean(key):
+    xs, mask = _setup(key)
+    out, _ = IPM(eps=0.5)(xs, mask)
+    gm = jnp.mean(xs[3:], axis=0)
+    np.testing.assert_allclose(out[0], -0.5 * gm, rtol=1e-5, atol=1e-6)
+    # inner product with the good mean is negative (the attack's signature)
+    assert float(out[0] @ gm) < 0
+
+
+def test_alie_stays_within_sigma_band(key):
+    xs, mask = _setup(key, n=25, f=5)
+    z = alie_z(25, 5)
+    assert 0.0 < z < 1.0  # paper: z ~= 0.25 for n=25, f=5
+    assert abs(z - 0.25) < 0.15
+    out, _ = ALIE(n=25, f=5)(xs, mask)
+    mu, sd = good_mean(xs, mask), good_std(xs, mask)
+    np.testing.assert_allclose(out[0], mu - z * sd, rtol=1e-4, atol=1e-5)
+
+
+def test_mimic_fixed_copies_target(key):
+    xs, mask = _setup(key)
+    out, _ = MimicFixed(i_star=5)(xs, mask)
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], xs[5])
+
+
+def test_mimic_copies_a_good_worker(key):
+    n, f, d = 10, 3, 16
+    attack = Mimic(warmup_steps=5)
+    state = attack.init_state(n, d)
+    mask = jnp.arange(n) < f
+    for t in range(8):
+        xs = jax.random.normal(jax.random.fold_in(key, t), (n, d))
+        out, state = attack(xs, mask, state)
+        i_star = int(state.i_star)
+        assert i_star >= f  # always mimics a *good* worker
+        for i in range(f):
+            np.testing.assert_array_equal(out[i], xs[i_star])
+    # after warmup the target is frozen
+    frozen = int(state.i_star)
+    xs = jax.random.normal(jax.random.fold_in(key, 99), (n, d))
+    _, state = attack(xs, mask, state)
+    assert int(state.i_star) == frozen
+
+
+def test_mimic_oja_finds_max_variance_direction(key):
+    """The streaming z estimate aligns with the dominant eigvector."""
+    n, f, d = 12, 2, 24
+    attack = Mimic(warmup_steps=100)
+    state = attack.init_state(n, d)
+    mask = jnp.arange(n) < f
+    direction = jax.nn.one_hot(3, d)  # variance concentrated on coord 3
+    for t in range(60):
+        k = jax.random.fold_in(key, t)
+        coef = jax.random.normal(k, (n, 1)) * 5.0
+        xs = coef * direction + 0.1 * jax.random.normal(jax.random.fold_in(k, 1), (n, d))
+        _, state = attack(xs, mask, state)
+    cos = abs(float(state.z @ direction))
+    assert cos > 0.9, cos
+
+
+def test_registry(key):
+    assert isinstance(get_attack("bf"), BitFlipping)
+    assert isinstance(get_attack("ipm", eps=0.2), IPM)
+    with pytest.raises(KeyError):
+        get_attack("nope")
+    with pytest.raises(ValueError):
+        ALIE()  # needs z or (n, f)

@@ -1,0 +1,108 @@
+"""Attention impls: blockwise (flash-style) == xla reference; ring-buffer
+decode cache; sliding windows; GQA head expansion."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import attention as attn
+import dataclasses
+
+
+def _cfg(**kw):
+    return dataclasses.replace(smoke_config("tinyllama-1.1b"), **kw)
+
+
+def _qkv(key, cfg, B=2, S=64):
+    p = attn.init_attention(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model),
+                          jnp.float32)
+    return p, x
+
+
+@pytest.mark.parametrize("window", [0, 32])
+@pytest.mark.parametrize("S", [64, 96])
+def test_blockwise_matches_xla(key, window, S):
+    cfg = _cfg(sliding_window=window, attn_block_q=32, attn_block_kv=32)
+    p, x = _qkv(key, cfg, S=S)
+    positions = jnp.arange(S)[None, :]
+    out_xla = attn.attention(p, x, cfg, positions, impl="xla")
+    out_blk = attn.attention(p, x, cfg, positions, impl="blockwise")
+    np.testing.assert_allclose(out_xla, out_blk, rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_expand_kv():
+    k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4).astype(jnp.float32)
+    out = attn._expand_kv(k, 6)  # 2 kv heads -> 6 heads, rep 3
+    assert out.shape == (2, 3, 6, 4)
+    np.testing.assert_array_equal(out[:, :, 0], k[:, :, 0])
+    np.testing.assert_array_equal(out[:, :, 2], k[:, :, 0])
+    np.testing.assert_array_equal(out[:, :, 3], k[:, :, 1])
+
+
+def test_decode_ring_buffer_matches_full(key):
+    """Decoding with a FULL-length cache matches forward attention exactly."""
+    cfg = _cfg()
+    S = 12
+    p, x = _qkv(key, cfg, B=1, S=S)
+    positions = jnp.arange(S)[None, :]
+    full = attn.attention(p, x, cfg, positions, impl="xla")
+
+    cache = attn.init_kv_cache(1, S, cfg, jnp.float32)
+    for t in range(S):
+        out, cache = attn.decode_attention(p, x[:, t:t + 1], cache, cfg,
+                                           jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(out[:, 0], full[:, t], rtol=2e-4, atol=2e-4)
+
+
+def test_decode_windowed_ring_buffer(key):
+    """A ring cache of capacity = window reproduces sliding-window attention."""
+    W = 8
+    cfg = _cfg(sliding_window=W)
+    S = 20
+    p, x = _qkv(key, cfg, B=1, S=S)
+    positions = jnp.arange(S)[None, :]
+    full = attn.attention(p, x, cfg, positions, impl="xla")
+
+    cache = attn.init_kv_cache(1, W, cfg, jnp.float32)
+    for t in range(S):
+        out, cache = attn.decode_attention(p, x[:, t:t + 1], cache, cfg,
+                                           jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(out[:, 0], full[:, t], rtol=5e-4, atol=5e-4)
+
+
+def test_causality(key):
+    """Changing future tokens never changes past outputs."""
+    cfg = _cfg()
+    S = 16
+    p, x = _qkv(key, cfg, B=1, S=S)
+    positions = jnp.arange(S)[None, :]
+    out1 = attn.attention(p, x, cfg, positions, impl="xla")
+    x2 = x.at[:, S // 2:].set(jax.random.normal(jax.random.fold_in(key, 7),
+                                                x[:, S // 2:].shape))
+    out2 = attn.attention(p, x2, cfg, positions, impl="xla")
+    np.testing.assert_allclose(out1[:, : S // 2], out2[:, : S // 2],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_divisor_block_handles_prefix_lengths():
+    """Prefix-extended sequence lengths (4096+256 etc.) get a dividing
+    block; powers of two keep the requested block."""
+    assert attn._divisor_block(4096, 512) == 512
+    assert 4352 % attn._divisor_block(4352, 512) == 0
+    assert attn._divisor_block(4352, 512) == 272  # 4352 = 2^8 * 17
+    assert 33024 % attn._divisor_block(33024, 1024) == 0
+    assert attn._divisor_block(7, 512) == 7
+
+
+def test_blockwise_ragged_seq_matches_xla(key):
+    """Non-power-of-two S (prefix-extended) must still be exact."""
+    cfg = _cfg(attn_block_q=32, attn_block_kv=32)
+    S = 72  # 72 % 32 != 0 -> divisor fallback (24)
+    p, x = _qkv(key, cfg, S=S)
+    positions = jnp.arange(S)[None, :]
+    out_xla = attn.attention(p, x, cfg, positions, impl="xla")
+    out_blk = attn.attention(p, x, cfg, positions, impl="blockwise")
+    np.testing.assert_allclose(out_xla, out_blk, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,41 @@
+"""Checkpoint save/restore roundtrip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path, key):
+    tree = {
+        "params": {"w": jax.random.normal(key, (3, 4)),
+                   "b": jnp.zeros((4,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    save_checkpoint(str(tmp_path), 7, tree)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = restore_checkpoint(str(tmp_path), like)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step(tmp_path, key):
+    tree = {"w": jnp.ones(2)}
+    save_checkpoint(str(tmp_path), 10, tree)
+    save_checkpoint(str(tmp_path), 200, tree)
+    assert latest_step(str(tmp_path)) == 200
+    restored = restore_checkpoint(str(tmp_path), tree)  # picks latest
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_missing_key_raises(tmp_path, key):
+    save_checkpoint(str(tmp_path), 0, {"w": jnp.ones(2)})
+    try:
+        restore_checkpoint(str(tmp_path), {"w": jnp.ones(2), "extra": jnp.ones(1)})
+        assert False, "expected KeyError"
+    except KeyError:
+        pass

@@ -1,0 +1,90 @@
+"""Hypothesis property-based tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregators import get_aggregator
+from repro.core.aragg import RobustAggregator
+
+AGGS = ["mean", "cm", "rfa", "krum", "tm"]
+
+
+def _xs(seed, n, d):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 2.0
+
+
+@given(name=st.sampled_from(AGGS), seed=st.integers(0, 100),
+       n=st.integers(3, 15), d=st.integers(1, 30))
+@settings(max_examples=40, deadline=None)
+def test_aggregate_in_convex_hull_coordinatewise_bounds(name, seed, n, d):
+    """Every aggregator's output is inside the coordinate-wise [min, max]
+    envelope of its inputs (all rules are convex combinations / selections /
+    order statistics)."""
+    xs = _xs(seed, n, d)
+    agg = get_aggregator(name)
+    out = agg.aggregate(xs)
+    lo, hi = jnp.min(xs, 0), jnp.max(xs, 0)
+    assert bool(jnp.all(out >= lo - 1e-4)) and bool(jnp.all(out <= hi + 1e-4))
+
+
+@given(name=st.sampled_from(AGGS), seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_permutation_invariance(name, seed):
+    """Aggregation must not depend on worker ordering (up to fp assoc)."""
+    xs = _xs(seed, 9, 12)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), 9)
+    agg = get_aggregator(name)
+    np.testing.assert_allclose(
+        agg.aggregate(xs), agg.aggregate(xs[perm]), rtol=5e-4, atol=5e-4
+    )
+
+
+@given(name=st.sampled_from(["mean", "cm", "tm", "krum"]), seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_translation_equivariance(name, seed):
+    """agg(x + t) == agg(x) + t for selection/order-statistic rules."""
+    xs = _xs(seed, 8, 10)
+    t = jax.random.normal(jax.random.PRNGKey(seed + 7), (10,)) * 3
+    agg = get_aggregator(name)
+    np.testing.assert_allclose(
+        agg.aggregate(xs + t), agg.aggregate(xs) + t, rtol=1e-3, atol=1e-3
+    )
+
+
+@given(seed=st.integers(0, 100), s=st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_robust_aggregator_scale_equivariance(seed, s):
+    """ARAGG(c * x) == c * ARAGG(x) for positively homogeneous rules (mean,
+    CM; RFA/Krum selections are scale-equivariant too)."""
+    xs = _xs(seed, 10, 8)
+    key = jax.random.PRNGKey(seed)
+    for name in ("cm", "rfa"):
+        ra = RobustAggregator.from_spec(name, mixing="bucketing", s=s)
+        a = ra(3.0 * xs, key=key)
+        b = 3.0 * ra(xs, key=key)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_unanimity(seed):
+    """If all workers agree, every rule returns that vector exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16,))
+    xs = jnp.broadcast_to(x, (7, 16))
+    for name in AGGS + ["cclip"]:
+        agg = get_aggregator(name, **({"tau": 1.0} if name == "cclip" else {}))
+        np.testing.assert_allclose(agg.aggregate(xs), x, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 500), W=st.integers(2, 20), d=st.integers(1, 50))
+@settings(max_examples=30, deadline=None)
+def test_kernel_gram_psd(seed, W, d):
+    """The Pallas Gram kernel returns a symmetric PSD matrix."""
+    from repro.kernels import pairwise_gram
+    xs = jax.random.normal(jax.random.PRNGKey(seed), (W, d))
+    g = np.asarray(pairwise_gram(xs))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)
+    eig = np.linalg.eigvalsh(g)
+    assert eig.min() > -1e-3 * max(1.0, eig.max())

@@ -1,0 +1,96 @@
+"""Serving engine: continuous batching over decode_step.
+
+Correctness bar: every request served through the multi-slot engine must
+produce EXACTLY the tokens a sequential single-request greedy decode
+produces (slot reuse and mixed-position cohorts must not leak state)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import transformer as tfm
+from repro.serving import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("tinyllama-1.1b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def reference_decode(cfg, params, prompt, max_new):
+    """Sequential single-request greedy decode (B=1)."""
+    cache = tfm.init_cache(cfg, 1, 256)
+    out = []
+    tok = None
+    for t in range(len(prompt) + max_new - 1):
+        feed = prompt[t] if t < len(prompt) else out[-1]
+        logits, cache = tfm.decode_step(
+            params, cfg, cache, jnp.asarray([feed], jnp.int32),
+            jnp.asarray(t, jnp.int32))
+        if t >= len(prompt) - 1:
+            out.append(int(jnp.argmax(logits[0])))
+    return out[:max_new]
+
+
+def test_single_request_matches_reference(setup):
+    cfg, params = setup
+    prompt = [5, 17, 99, 3]
+    expect = reference_decode(cfg, params, prompt, 6)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=6))
+    done = eng.run_until_drained()
+    assert done[1].output == expect
+
+
+def test_batch_of_heterogeneous_requests(setup):
+    cfg, params = setup
+    prompts = {
+        1: [5, 17, 99, 3],
+        2: [42],
+        3: [7, 7, 7, 7, 7, 7, 7, 7],
+        4: [100, 200],
+        5: [11, 12, 13],
+    }
+    news = {1: 4, 2: 6, 3: 3, 4: 5, 5: 4}
+    expect = {u: reference_decode(cfg, params, p, news[u])
+              for u, p in prompts.items()}
+
+    # 2 slots for 5 requests => forced slot reuse (continuous batching)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    for u, p in prompts.items():
+        eng.submit(Request(uid=u, prompt=p, max_new_tokens=news[u]))
+    done = eng.run_until_drained()
+    assert set(done) == set(prompts)
+    for u in prompts:
+        assert done[u].output == expect[u], (u, done[u].output, expect[u])
+
+
+def test_eos_early_stop(setup):
+    cfg, params = setup
+    prompt = [5, 17, 99, 3]
+    full = reference_decode(cfg, params, prompt, 8)
+    # pick an eos token at its FIRST occurrence in the greedy stream
+    j = next(i for i, t in enumerate(full) if t not in full[:i])
+    eos = full[j]
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    eng.submit(Request(uid=9, prompt=prompt, max_new_tokens=8, eos_id=eos))
+    done = eng.run_until_drained()
+    assert done[9].output == full[:j + 1]
+
+
+def test_ssm_arch_served(setup):
+    """Recurrent-state archs need the explicit slot reset — verify reuse."""
+    cfg = smoke_config("mamba2-130m")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    p1, p2 = [3, 1, 4, 1, 5], [2, 7, 1, 8]
+    e1 = reference_decode(cfg, params, p1, 4)
+    e2 = reference_decode(cfg, params, p2, 4)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64)  # serial reuse
+    eng.submit(Request(uid=1, prompt=p1, max_new_tokens=4))
+    eng.submit(Request(uid=2, prompt=p2, max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert done[1].output == e1
+    assert done[2].output == e2
