@@ -26,11 +26,37 @@ with the identity permutation, kept as a baseline.
 from __future__ import annotations
 
 import abc
+import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def _bucketing_base(n: int, s: int) -> np.ndarray:
+    """Identity-permutation bucketing matrix ``[ceil(n/s), n]`` (fp32): slot
+    ``j`` feeds bucket ``j // s`` with weight ``1/|bucket|``. Static in
+    ``(n, s)`` — the per-round work is only the column permutation. Cached
+    as NUMPY: a jnp array built inside a jit trace is a tracer, and caching
+    one leaks it across traces."""
+    m = math.ceil(n / s)
+    bucket_of = np.arange(n) // s
+    sizes = np.bincount(bucket_of, minlength=m).astype(np.float32)
+    base = np.zeros((m, n), np.float32)
+    base[bucket_of, np.arange(n)] = 1.0
+    base /= sizes[:, None]
+    return base
+
+
+@functools.lru_cache(maxsize=None)
+def _resampling_src(n: int, s: int) -> np.ndarray:
+    """Replica->input map of the ``s*n`` slots (== the slot->group map):
+    slot ``k`` holds a replica of input ``k // s``. Static in ``(n, s)``;
+    numpy-cached for the same trace-safety reason as ``_bucketing_base``."""
+    return np.arange(s * n) // s
 
 
 class Mixer(abc.ABC):
@@ -91,14 +117,14 @@ class Bucketing(Mixer):
         return math.ceil(n / self.s)
 
     def matrix(self, key, n):
-        m = self.n_out(n)
-        perm = jnp.arange(n) if key is None else jax.random.permutation(key, n)
-        # bucket b holds permuted inputs [b*s, min((b+1)*s, n))
-        bucket_of = jnp.arange(n) // self.s  # bucket of each *slot*
-        sizes = jnp.bincount(bucket_of, length=m).astype(jnp.float32)
-        mat = jnp.zeros((m, n), jnp.float32)
-        mat = mat.at[bucket_of, perm].set(1.0)
-        return mat / sizes[:, None]
+        # bucket b holds permuted inputs [b*s, min((b+1)*s, n)); the static
+        # scatter (bucket-of-slot + bucket sizes) is cached per (n, s) and
+        # only the column permutation is per-round work.
+        base = jnp.asarray(_bucketing_base(n, self.s))
+        if key is None:
+            return base
+        perm = jax.random.permutation(key, n)
+        return jnp.zeros_like(base).at[:, perm].set(base)
 
 
 class FixedGrouping(Bucketing):
@@ -133,9 +159,11 @@ class Resampling(Mixer):
     def matrix(self, key, n):
         s = self.s
         total = s * n
-        src = jnp.arange(total) // s  # replica k comes from input ceil(k/s)
+        # replica k comes from input k // s; slot t feeds output group t // s.
+        # Both maps are the same static (n, s)-cached array; only the slot
+        # permutation (and its scatter-add) is per-round work.
+        src = group_of = jnp.asarray(_resampling_src(n, s))
         perm = jnp.arange(total) if key is None else jax.random.permutation(key, total)
-        group_of = jnp.arange(total) // s  # output group of each slot
         mat = jnp.zeros((n, n), jnp.float32)
         # slot t holds replica perm[t] of input src[perm[t]], feeding group_of[t]
         mat = mat.at[group_of, src[perm]].add(1.0 / s)

@@ -1,0 +1,236 @@
+"""Packed flat-buffer robust-aggregation engine.
+
+The per-leaf sync path (repro/distributed/robust_sync.py) pays a per-leaf
+tax that dwarfs the aggregation math: every gradient leaf is resharded (an
+all-to-all), upcast, and matmul'd twice per step (stats + combine), so a
+transformer with hundreds of leaves issues hundreds of small collectives
+and kernel launches per round. Mixing, the Gram stats phase, and the
+combine are all LINEAR in the inputs, so the whole stats -> coeff ->
+combine pipeline runs unchanged on one packed ``[W, N_pad]`` fp32 buffer
+with exactly ONE reshard in and ONE reshard out per sync — this also covers
+NNM-style pre-aggregation (Allouah et al., *Fixing by Mixing*, 2023), which
+is just another row-stochastic mixing operator.
+
+``GradPacker`` owns the layout: treedef, per-leaf shapes/dtypes, and column
+offsets, computed once per tree structure and cached (``packer_for``). Each
+leaf's segment is padded up to a ``block_d`` multiple. That per-leaf
+alignment is what makes the packed engine BIT-IDENTICAL to the per-leaf
+oracle: the Gram kernel (kernels/pairwise_gram.py) accumulates fixed
+``[W, block_d]`` block dots in column order, so one call over the packed
+buffer performs the exact same sequence of fp32 operations as the oracle's
+chain of per-leaf calls (seeded via the kernel's ``acc`` input). Mixing and
+combine reduce over the (tiny, zero-padded) worker axis per column, which
+is insensitive to column blocking. Asserted in tests/test_packing.py.
+
+COLLECTIVE SCHEDULE: ``reshard_in`` lays the packed parameter dimension
+across ALL mesh axes with the worker axis replicated (one all-to-all);
+every device then computes on its identical-worker ``[W, N_pad/n_dev]``
+slice (partial Gram + a [W, W] all-reduce resolved by GSPMD); ``reshard_out``
+replicates the combined ``[N_pad]`` row (one collective) before unpacking.
+Exactly one reshard-in/reshard-out pair per sync REGARDLESS of leaf count.
+
+Kernels vs GSPMD: on a trivial mesh (absent or single-device — the
+single-host simulation, tests and benchmarks) the three phases run through
+the Pallas kernels. On a multi-device mesh the phases fall back to plain
+``jnp`` contractions that GSPMD partitions across the column sharding
+(``pallas_call`` is opaque to the partitioner); wiring ``shard_map`` around
+the kernels for the production mesh is a ROADMAP follow-up.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aragg import RobustAggregator
+from repro.kernels import ops
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+class GradPacker:
+    """Flattens a per-worker gradient pytree (leaves ``[W, ...]``) into one
+    padded ``[W, n_pad]`` fp32 buffer and back. Layout is static per tree
+    structure; build instances via ``packer_for`` to get caching."""
+
+    def __init__(self, treedef, leaf_shapes: Tuple[tuple, ...],
+                 leaf_dtypes: tuple, block_d: int = 2048):
+        if block_d % 128:
+            raise ValueError(f"block_d must be a multiple of 128, got {block_d}")
+        self.treedef = treedef
+        self.leaf_shapes = tuple(tuple(s) for s in leaf_shapes)  # sans worker axis
+        self.leaf_dtypes = tuple(jnp.dtype(d) for d in leaf_dtypes)
+        self.block_d = int(block_d)
+        self.sizes = tuple(math.prod(s) for s in self.leaf_shapes)
+        # each leaf segment is padded to a block_d multiple so kernel blocks
+        # never straddle leaves (the bit-exactness alignment, module docstring)
+        self.padded = tuple(_round_up(z, block_d) if z else 0 for z in self.sizes)
+        self.offsets = tuple(
+            sum(self.padded[:i]) for i in range(len(self.padded))
+        )
+        self.n_params = sum(self.sizes)
+        self.n_pad = sum(self.padded)
+
+    # ------------------------------------------------------------------ pack
+    def pack(self, grads_w: Any) -> jnp.ndarray:
+        """Stacked tree (leaves ``[W, ...]``) -> packed ``[W, n_pad]`` fp32.
+
+        Writes each segment into a zeros buffer with dynamic_update_slice —
+        under jit XLA aliases the updates in place, so pack costs one pass
+        over the gradient bytes. (A concatenate of interleaved data/zero
+        pieces is 20x slower on CPU XLA at transformer leaf counts.)"""
+        leaves = jax.tree_util.tree_leaves(grads_w)
+        W = leaves[0].shape[0]
+        buf = jnp.zeros((W, self.n_pad), jnp.float32)
+        for leaf, size, off in zip(leaves, self.sizes, self.offsets):
+            if size == 0:
+                continue
+            piece = leaf.reshape(W, size).astype(jnp.float32)
+            buf = jax.lax.dynamic_update_slice(buf, piece, (0, off))
+        return buf
+
+    # ---------------------------------------------------------------- unpack
+    def unpack(self, vec: jnp.ndarray) -> Any:
+        """Packed row ``[n_pad]`` -> gradient tree (original shapes/dtypes)."""
+        leaves = [
+            vec[off : off + size].reshape(shape).astype(dtype)
+            for off, size, shape, dtype in zip(
+                self.offsets, self.sizes, self.leaf_shapes, self.leaf_dtypes
+            )
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def unpack_stacked(self, buf: jnp.ndarray) -> Any:
+        """Packed stack ``[k, n_pad]`` -> tree with the leading axis kept."""
+        k = buf.shape[0]
+        leaves = [
+            buf[:, off : off + size].reshape((k,) + shape).astype(dtype)
+            for off, size, shape, dtype in zip(
+                self.offsets, self.sizes, self.leaf_shapes, self.leaf_dtypes
+            )
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"GradPacker(n_leaves={len(self.sizes)}, n_params={self.n_params}, "
+                f"n_pad={self.n_pad}, block_d={self.block_d})")
+
+
+_PACKER_CACHE: Dict[tuple, GradPacker] = {}
+
+
+def packer_for(grads_w: Any, block_d: int = 2048) -> GradPacker:
+    """Layout-cached ``GradPacker`` for this tree structure (leaves carry a
+    leading worker axis that is NOT part of the layout)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads_w)
+    key = (
+        treedef,
+        tuple(tuple(l.shape[1:]) for l in leaves),
+        tuple(jnp.dtype(l.dtype) for l in leaves),
+        int(block_d),
+    )
+    packer = _PACKER_CACHE.get(key)
+    if packer is None:
+        packer = GradPacker(treedef, key[1], key[2], block_d=block_d)
+        _PACKER_CACHE[key] = packer
+    return packer
+
+
+# -------------------------------------------------------------- collectives
+def reshard_in(buf: jnp.ndarray, mesh) -> jnp.ndarray:
+    """The ONE ingress collective per sync: lay the packed parameter columns
+    across ALL mesh axes, worker axis replicated (an all-to-all). No-op
+    without a mesh (the single-host simulation path)."""
+    if mesh is None:
+        return buf
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(mesh, P(None, axes if len(axes) > 1 else axes[0]))
+    )
+
+
+def reshard_out(vec: jnp.ndarray, mesh) -> jnp.ndarray:
+    """The ONE egress collective per sync: replicate the combined packed row
+    so unpacking (and the optimizer update) see local values."""
+    if mesh is None:
+        return vec
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(vec, NamedSharding(mesh, P()))
+
+
+def _mesh_is_trivial(mesh) -> bool:
+    return mesh is None or mesh.devices.size == 1
+
+
+# ------------------------------------------------------------------- engine
+def packed_robust_sync(
+    grads_w: Any,
+    aggregator: RobustAggregator,
+    key: Optional[jax.Array] = None,
+    mesh=None,
+    block_d: int = 2048,
+    use_kernels: Optional[bool] = None,
+) -> Tuple[Any, dict]:
+    """Aggregate per-worker gradient trees (leaves ``[W, ...]``) into one
+    gradient tree on a single packed buffer. Returns ``(grads, info)``.
+
+    Semantics match the per-leaf path and ``RobustAggregator`` on the
+    stacked vector; with kernels on, the result is bit-identical to the
+    per-leaf kernel oracle (tests/test_packing.py)."""
+    packer = packer_for(grads_w, block_d=block_d)
+    leaves = jax.tree_util.tree_leaves(grads_w)
+    W = leaves[0].shape[0]
+    if packer.n_params == 0:  # degenerate all-empty tree
+        return packer.unpack(jnp.zeros((packer.n_pad,), jnp.float32)), {}
+    if use_kernels is None:
+        use_kernels = _mesh_is_trivial(mesh)
+    info: dict = {}
+
+    buf = reshard_in(packer.pack(grads_w), mesh)  # [W, n_pad] fp32
+
+    if aggregator.base.coordinatewise:
+        mix_key = None if key is None else jax.random.split(key)[0]
+        m = aggregator.mixer.matrix(mix_key, W)
+        mixed = (ops.mix_apply(m, buf, block_d=block_d) if use_kernels
+                 else m @ buf)
+        if use_kernels and aggregator.base.name == "cm":
+            out = ops.cm_aggregate(mixed, block_d=block_d)
+        else:
+            out = aggregator.base.combine_leaf(mixed)
+        return packer.unpack(reshard_out(out, mesh)), info
+
+    gram = (ops.gram(buf, block_d=block_d) if use_kernels
+            else buf @ buf.T)
+    weights = aggregator.worker_weights_from_gram(gram, key=key)
+    info["agg_weights"] = weights
+    info["gram_diag_mean"] = jnp.mean(jnp.diagonal(gram))
+    out = (ops.mix_apply(weights[None, :], buf, block_d=block_d)[0]
+           if use_kernels else weights @ buf)
+    return packer.unpack(reshard_out(out, mesh)), info
+
+
+def packed_aggregate(
+    xs: jnp.ndarray,
+    aggregator: RobustAggregator,
+    key: Optional[jax.Array] = None,
+    block_d: int = 2048,
+    use_kernels: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Packed engine on an already-stacked ``[W, d]`` matrix -> ``[d]``.
+
+    The kernel-accelerated counterpart of ``RobustAggregator.__call__`` for
+    callers that hold a flat stack (the cross-device FL server, benchmark
+    harnesses): same mixing + rule, one pass over one padded buffer."""
+    out_tree, _ = packed_robust_sync(
+        [xs], aggregator, key=key, mesh=None, block_d=block_d,
+        use_kernels=use_kernels,
+    )
+    return out_tree[0]

@@ -4,7 +4,9 @@ Workers = data-parallel mesh groups: the global batch dim is split over the
 (pod, data) axes into W worker shards; per-worker gradients come from a
 ``vmap`` over the worker axis (no cross-worker reduction), then the paper's
 mixing + robust aggregation REPLACES the gradient all-reduce
-(``robust_gradient_sync``). Attack simulation is a feature of the
+(``robust_gradient_sync`` with the packed flat-buffer engine: one column
+reshard in, one reshard out per step, regardless of how many gradient
+leaves the architecture has — see repro/distributed/packing.py). Attack simulation is a feature of the
 single-host simulation path (repro/training/byzantine.py); the distributed
 path runs the defense.
 
@@ -149,7 +151,7 @@ def make_train_step(
             else:
                 messages = grads_w
             agg_grads, info = robust_gradient_sync(messages, aggregator, key=key,
-                                                   mesh=mesh)
+                                                   mesh=mesh, engine="packed")
 
         params, opt_state = opt_update(agg_grads, opt_state, params)
         metrics = {"loss": loss}

@@ -13,6 +13,7 @@ backend); on TPU the identical ``pl.pallas_call``s compile natively.
 
 from repro.kernels.bucket_mix import bucket_mix
 from repro.kernels.cclip_combine import cclip_combine
+from repro.kernels.cclip_fused import cclip_fused_iter
 from repro.kernels.cwise_median import cwise_median
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.pairwise_gram import pairwise_gram
@@ -21,6 +22,7 @@ from repro.kernels.weiszfeld_norms import residual_norms
 __all__ = [
     "bucket_mix",
     "cclip_combine",
+    "cclip_fused_iter",
     "cwise_median",
     "flash_attention",
     "pairwise_gram",

@@ -8,11 +8,18 @@ The composed aggregators here are the kernel-accelerated counterparts of
 ``repro.core.aggregators`` (oracles in ``ref.py``; equivalence is asserted
 in tests/test_kernels.py):
 
-  gram(xs)                    stats phase for Krum / RFA / CCLIP
+  gram(xs, acc=...)           stats phase for Krum / RFA / CCLIP
   cm_aggregate(xs)            full coordinate-wise median
   mix_apply(M, xs)            bucketing / resampling application
   rfa_aggregate(xs)           smoothed Weiszfeld via fused residual-norm passes
-  cclip_aggregate(xs, tau)    centered clipping via norms+combine passes
+  cclip_aggregate(xs, tau)    centered clipping, ONE fused HBM pass/iteration
+
+``cclip_aggregate`` runs each iteration through ``cclip_fused_iter``
+(combine + next-iteration norms in one streaming pass); the pre-fusion
+two-kernel schedule is kept as ``cclip_aggregate_unfused`` — it is the
+benchmark baseline in benchmarks/agg_microbench.py and documents what the
+fusion saves (a norms pass over a ``[W+1, d]`` pseudo-row stack built by a
+full `jnp.concatenate` copy, plus a separate combine pass).
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.kernels.bucket_mix import bucket_mix
 from repro.kernels.cclip_combine import cclip_combine
+from repro.kernels.cclip_fused import cclip_fused_iter
 from repro.kernels.cwise_median import cwise_median
 from repro.kernels.pairwise_gram import pairwise_gram
 from repro.kernels.weiszfeld_norms import residual_norms
@@ -33,8 +41,10 @@ def _interp() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def gram(xs: jnp.ndarray, *, block_d: int = 2048) -> jnp.ndarray:
-    return pairwise_gram(xs, block_d=block_d, interpret=_interp())
+def gram(xs: jnp.ndarray, acc: jnp.ndarray | None = None, *,
+         block_d: int = 2048, full_blocks: bool = False) -> jnp.ndarray:
+    return pairwise_gram(xs, acc, block_d=block_d, full_blocks=full_blocks,
+                         interpret=_interp())
 
 
 def cm_aggregate(xs: jnp.ndarray, *, block_d: int = 1024) -> jnp.ndarray:
@@ -65,13 +75,38 @@ def rfa_aggregate(xs: jnp.ndarray, *, n_iters: int = 8, eps: float = 1e-6,
 @functools.partial(jax.jit, static_argnames=("n_iters", "block_d"))
 def cclip_aggregate(xs: jnp.ndarray, tau: float, *, n_iters: int = 3,
                     eps: float = 1e-12, block_d: int = 2048) -> jnp.ndarray:
-    """Centered clipping: norms pass + fused combine pass per iteration."""
+    """Centered clipping: ONE fused (combine + next-norms) pass per iteration.
+
+    The fused kernel returns ``v'`` together with ``||x_i - v'||^2``, so the
+    residuals each iteration needs were already computed while the previous
+    update streamed by — only the initial center costs a dedicated norms
+    pass (with an explicit center row; no pseudo-row concat).
+    """
+    W = xs.shape[0]
+    interp = _interp()
+    v = mix_apply(jnp.full((1, W), 1.0 / W, jnp.float32), xs, block_d=block_d)[0]
+    r2 = residual_norms(xs, center=v, block_d=block_d, interpret=interp)
+
+    def body(carry, _):
+        v, r2 = carry
+        lam = jnp.minimum(1.0, tau / jnp.sqrt(r2 + eps))
+        return cclip_fused_iter(xs, v, lam, block_d=block_d, interpret=interp), None
+
+    (v, _), _ = jax.lax.scan(body, (v, r2), None, length=n_iters)
+    return v
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block_d"))
+def cclip_aggregate_unfused(xs: jnp.ndarray, tau: float, *, n_iters: int = 3,
+                            eps: float = 1e-12, block_d: int = 2048) -> jnp.ndarray:
+    """Pre-fusion CCLIP schedule: norms pass + combine pass per iteration,
+    with the center appended to the stack as a pseudo-row (a full stack
+    copy). Kept as the microbenchmark baseline for ``cclip_aggregate``."""
     W = xs.shape[0]
     interp = _interp()
     v = mix_apply(jnp.full((1, W), 1.0 / W, jnp.float32), xs, block_d=block_d)[0]
 
     def body(v, _):
-        # residual norms against an explicit v: append v as a pseudo-row
         diffs2 = residual_norms(
             jnp.concatenate([xs.astype(jnp.float32), v[None, :]], axis=0),
             jnp.zeros((W + 1,), jnp.float32).at[W].set(1.0),

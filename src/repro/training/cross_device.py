@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ByzConfig
 from repro.core.attacks import get_attack
+from repro.distributed.packing import packed_aggregate
 from repro.training.byzantine import stack_flatten_workers, unflatten_like
 
 
@@ -78,7 +79,9 @@ class CrossDeviceSim:
 
         # attacks are stateless here (no persistent cohort across rounds)
         sent, _ = self.attack(g_flat, byz_mask, None, key=k_agg)
-        agg = self.aggregator(sent, key=k_agg)
+        # the cohort stack is already flat, so the packed engine applies
+        # directly: kernel-routed mixing + rule on one padded buffer.
+        agg = packed_aggregate(sent, self.aggregator, key=k_agg)
 
         # Remark 7: SERVER momentum on the robust aggregate
         beta = self.server_momentum

@@ -102,6 +102,53 @@ def test_ops_cclip_aggregate_matches_ref():
     )
 
 
+@pytest.mark.parametrize("shape", [(10, 1000), (53, 257)])
+def test_residual_norms_explicit_center(shape):
+    """center=v is the pseudo-row-free path: ||x_i - v||^2 without building
+    a [W+1, d] stack."""
+    W, d = shape
+    xs = _xs(shape, jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(5), (d,), jnp.float32)
+    expect = jnp.sum((xs - v[None, :]) ** 2, axis=1)
+    np.testing.assert_allclose(
+        residual_norms(xs, center=v), expect, rtol=1e-4, atol=1e-3
+    )
+    with pytest.raises(ValueError):
+        residual_norms(xs)
+    with pytest.raises(ValueError):
+        c = jnp.full((W,), 1.0 / W, jnp.float32)
+        residual_norms(xs, c, center=v)
+
+
+@pytest.mark.parametrize("shape", [(10, 1000), (25, 4097)])
+def test_cclip_fused_iter_matches_two_pass(shape):
+    """Fused kernel == separate combine + residual-norm passes."""
+    from repro.kernels import cclip_fused_iter
+
+    W, d = shape
+    xs = _xs(shape, jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(6), (d,), jnp.float32)
+    lam = jax.random.uniform(jax.random.PRNGKey(7), (W,))
+    v_new, r2 = cclip_fused_iter(xs, v, lam)
+    expect_v = ref.cclip_combine(xs, v, lam)
+    np.testing.assert_allclose(v_new, expect_v, rtol=1e-5, atol=1e-4)
+    expect_r2 = jnp.sum((xs - expect_v[None, :]) ** 2, axis=1)
+    np.testing.assert_allclose(r2, expect_r2, rtol=1e-4, atol=1e-3)
+
+
+def test_gram_acc_chaining_bit_exact():
+    """Chained per-segment Gram calls (acc + full_blocks) == one call on the
+    concatenated block-aligned buffer, BIT for bit — the packed/per-leaf
+    bridge."""
+    bd = 256
+    xs1 = _xs((12, bd * 2), jnp.float32, seed=11)
+    xs2 = _xs((12, bd * 3), jnp.float32, seed=12)
+    chained = pairwise_gram(xs1, block_d=bd, full_blocks=True)
+    chained = pairwise_gram(xs2, chained, block_d=bd, full_blocks=True)
+    packed = pairwise_gram(jnp.concatenate([xs1, xs2], axis=1), block_d=bd)
+    np.testing.assert_array_equal(np.asarray(chained), np.asarray(packed))
+
+
 def test_ops_match_core_aggregators(key):
     """Kernel path == the repro.core implementations used by the trainer."""
     from repro.core.aggregators import RFA, CenteredClip, CoordinateWiseMedian

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # absent in some environments
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mixing import Bucketing, FixedGrouping, NoMix, Resampling, get_mixer

@@ -1,0 +1,163 @@
+"""Packed flat-buffer robust-aggregation engine (distributed/packing.py):
+layout round-trips, BIT-exact agreement with the per-leaf oracle, the
+one-collective-per-phase schedule, and the flat-stack entry point."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aragg import RobustAggregator
+from repro.distributed import packing
+from repro.distributed.packing import packed_aggregate, packer_for
+from repro.distributed.robust_sync import robust_gradient_sync
+
+BLOCK_D = 256  # small blocks so tiny test leaves still span multiple blocks
+
+
+def _mixed_dtype_tree(key, W=6):
+    ks = jax.random.split(key, 4)
+    return {
+        "w": jax.random.normal(ks[0], (W, 4, 6), jnp.float32),
+        "b": jax.random.normal(ks[1], (W,), jnp.float32).astype(jnp.bfloat16),
+        "e": jnp.zeros((W, 0, 3), jnp.float32),  # empty leaf
+        "h": jax.random.normal(ks[2], (W, 513), jnp.float32).astype(jnp.float16),
+        "s": {"v": jax.random.normal(ks[3], (W, 3, 2, 2), jnp.float32)},
+    }
+
+
+def _f32_tree(key, W=12, sizes=((24,), (300,), (7, 11), (1000,), (2, 0))):
+    ks = jax.random.split(key, len(sizes))
+    return {f"l{i}": jax.random.normal(k, (W,) + s, jnp.float32)
+            for i, (k, s) in enumerate(zip(ks, sizes))}
+
+
+# ------------------------------------------------------------------- layout
+def test_pack_unpack_roundtrip_mixed_dtypes(key):
+    tree = _mixed_dtype_tree(key)
+    packer = packer_for(tree, block_d=BLOCK_D)
+    buf = packer.pack(tree)
+    assert buf.dtype == jnp.float32
+    assert buf.shape == (6, packer.n_pad)
+    assert packer.n_pad % BLOCK_D == 0
+    # every leaf segment starts on a block boundary (bit-exactness alignment)
+    assert all(off % BLOCK_D == 0 for off in packer.offsets)
+    back = packer.unpack_stacked(buf)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # single-row unpack slices worker 0 exactly
+    row = packer.unpack(buf[0])
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(row)):
+        np.testing.assert_array_equal(np.asarray(a[0], np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_packer_layout_is_cached(key):
+    tree = _f32_tree(key)
+    assert packer_for(tree, block_d=BLOCK_D) is packer_for(tree, block_d=BLOCK_D)
+    assert packer_for(tree, block_d=BLOCK_D) is not packer_for(tree, block_d=512)
+
+
+def test_empty_tree_degenerate():
+    tree = {"e": jnp.zeros((4, 0), jnp.float32)}
+    ra = RobustAggregator.from_spec("rfa", mixing="none")
+    out, _ = robust_gradient_sync(tree, ra, engine="packed", block_d=BLOCK_D)
+    assert out["e"].shape == (0,)
+
+
+# ----------------------------------------------- bit-exactness vs the oracle
+RULES = [
+    ("krum", {"n_byzantine": 2}),
+    ("rfa", {}),
+    ("cclip", {"tau": 3.0}),
+    ("cm", {}),
+    ("tm", {"n_trim": 2}),
+    ("mean", {}),
+]
+MIXINGS = ["none", "bucketing", "resampling"]
+
+
+@pytest.mark.parametrize("agg,kwargs", RULES, ids=[r[0] for r in RULES])
+@pytest.mark.parametrize("mixing", MIXINGS)
+def test_packed_bit_identical_to_per_leaf_oracle(key, agg, kwargs, mixing):
+    """The packed engine performs the identical fp32 operation sequence as
+    the per-leaf kernel oracle (leaf segments are block-aligned, the Gram
+    kernel chains its accumulator), so outputs match BIT FOR BIT."""
+    tree = _f32_tree(key)
+    ra = RobustAggregator.from_spec(agg, mixing=mixing, s=3, **kwargs)
+    agg_key = jax.random.PRNGKey(42)
+    out_p, info_p = robust_gradient_sync(tree, ra, key=agg_key,
+                                         engine="packed", block_d=BLOCK_D)
+    out_o, info_o = robust_gradient_sync(tree, ra, key=agg_key,
+                                         engine="per_leaf", block_d=BLOCK_D,
+                                         use_kernels=True)
+    for lp, lo in zip(jax.tree_util.tree_leaves(out_p),
+                      jax.tree_util.tree_leaves(out_o)):
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(lo))
+    if "agg_weights" in info_p:
+        np.testing.assert_array_equal(np.asarray(info_p["agg_weights"]),
+                                      np.asarray(info_o["agg_weights"]))
+
+
+@pytest.mark.parametrize("agg,mixing", [
+    ("krum", "bucketing"), ("rfa", "resampling"), ("cclip", "bucketing"),
+    ("cm", "bucketing"),
+])
+def test_packed_matches_stacked_semantics(key, agg, mixing):
+    """Against the original stacked RobustAggregator (value semantics)."""
+    tree = _f32_tree(key)
+    kwargs = {"n_byzantine": 2} if agg == "krum" else (
+        {"tau": 3.0} if agg == "cclip" else {})
+    ra = RobustAggregator.from_spec(agg, mixing=mixing, s=3, **kwargs)
+    agg_key = jax.random.PRNGKey(7)
+    out, _ = robust_gradient_sync(tree, ra, key=agg_key, engine="packed",
+                                  block_d=BLOCK_D)
+    flat_out = jnp.concatenate(
+        [x.reshape(-1) for x in jax.tree_util.tree_leaves(out)]
+    )
+    leaves = jax.tree_util.tree_leaves(tree)
+    stacked = jnp.concatenate([x.reshape(x.shape[0], -1) for x in leaves], axis=1)
+    expect = ra(stacked, key=agg_key)
+    np.testing.assert_allclose(flat_out, expect, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------- collective schedule
+@pytest.mark.parametrize("n_leaves", [3, 17])
+@pytest.mark.parametrize("agg", ["rfa", "cm"])
+def test_exactly_one_reshard_pair_per_sync(key, monkeypatch, agg, n_leaves):
+    """One reshard-in and one reshard-out per sync, REGARDLESS of leaf count
+    (the per-leaf path pays two collectives per leaf — the point of the
+    packed engine)."""
+    sizes = tuple((16 + i,) for i in range(n_leaves))
+    tree = _f32_tree(key, W=8, sizes=sizes)
+    calls = {"in": 0, "out": 0}
+    orig_in, orig_out = packing.reshard_in, packing.reshard_out
+
+    def count_in(buf, mesh):
+        calls["in"] += 1
+        return orig_in(buf, mesh)
+
+    def count_out(vec, mesh):
+        calls["out"] += 1
+        return orig_out(vec, mesh)
+
+    monkeypatch.setattr(packing, "reshard_in", count_in)
+    monkeypatch.setattr(packing, "reshard_out", count_out)
+    ra = RobustAggregator.from_spec(agg, mixing="bucketing", s=2)
+    robust_gradient_sync(tree, ra, key=key, engine="packed", block_d=BLOCK_D)
+    assert calls == {"in": 1, "out": 1}
+
+
+# ---------------------------------------------------------- flat-stack entry
+def test_packed_aggregate_flat_stack(key):
+    xs = jax.random.normal(key, (10, 700), jnp.float32)
+    for agg, kwargs in [("rfa", {}), ("cm", {}), ("cclip", {"tau": 5.0})]:
+        ra = RobustAggregator.from_spec(agg, mixing="bucketing", s=2, **kwargs)
+        k = jax.random.PRNGKey(3)
+        out = packed_aggregate(xs, ra, key=k, block_d=BLOCK_D)
+        np.testing.assert_allclose(out, ra(xs, key=k), rtol=2e-4, atol=2e-4)
+        assert out.shape == (700,)

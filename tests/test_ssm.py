@@ -97,6 +97,7 @@ def test_ssm_layer_decode_matches_train(key):
 
 
 # --------------------------------------------------- hypothesis properties
+pytest.importorskip("hypothesis")  # absent in some environments
 from hypothesis import given, settings, strategies as st
 
 
