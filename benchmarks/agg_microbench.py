@@ -13,6 +13,9 @@ Two engine sweeps back the packed flat-buffer engine
   and several launches per leaf, packed pays one of each per sync.
 - ``cclip/*`` : fused one-pass-per-iteration CCLIP vs the pre-fusion
   norms-pass + combine-pass (+ pseudo-row stack copy) schedule.
+- ``egress/*``: HLO collective BYTES (not wall time) of the packed engine's
+  replicated vs param-sharded egress on a forced 8-device host mesh —
+  compiled in a subprocess so this process keeps the real single device.
 
 ``main()`` writes the machine-readable results to
 ``BENCH_agg_microbench.json`` at the repo root.
@@ -21,6 +24,9 @@ Two engine sweeps back the packed flat-buffer engine
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -85,6 +91,55 @@ def sync_engine_sweep(rep, key):
                 rep.add(f"sync/{agg}/{engine}/L={L}", us)
 
 
+_EGRESS_CHILD = r"""
+import json, jax, jax.numpy as jnp
+from repro.configs.base import ByzConfig
+from repro.distributed.robust_sync import robust_gradient_sync
+from repro.distributed.sharding import param_shardings
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(data=4, model=2)
+W = 8
+tree = {"wq": jnp.zeros((W, 512, 512), jnp.float32),
+        "wff": jnp.zeros((W, 512, 2048), jnp.float32)}
+ra = ByzConfig(aggregator="rfa", mixing="bucketing", s=2).make_aggregator(W)
+shapes = jax.tree_util.tree_map(
+    lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+out_sh = param_shardings(shapes, mesh, fsdp=True)
+
+def sync(t, k, osh=None):
+    return robust_gradient_sync(t, ra, key=k, mesh=mesh, engine="packed",
+                                use_kernels=False, out_shardings=osh)[0]
+
+k0 = jax.random.PRNGKey(0)
+with mesh:
+    rep = jax.jit(sync).lower(tree, k0).compile().as_text()
+    par = jax.jit(lambda t, k: sync(t, k, out_sh)).lower(tree, k0).compile().as_text()
+print(json.dumps({"replicated": sum(collective_bytes(rep).values()),
+                  "param_sharded": sum(collective_bytes(par).values())}))
+"""
+
+
+def egress_bytes_sweep(rep):
+    """Collective bytes of the two packed-engine egress modes (module
+    docstring). Compiled on 8 forced host devices in a child process."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    root = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _EGRESS_CHILD], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        print(f"  egress sweep skipped: {proc.stderr[-300:]}", flush=True)
+        return
+    bytes_by_mode = json.loads(proc.stdout.strip().splitlines()[-1])
+    for mode, b in bytes_by_mode.items():
+        rep.add(f"egress/{mode}/coll_bytes", float(b))
+
+
 def cclip_fusion_sweep(rep, key):
     """Fused (one HBM pass/iteration) vs unfused CCLIP kernel schedule."""
     xs = jax.random.normal(key, (25, 100_352), jnp.float32)
@@ -111,6 +166,13 @@ def _write_json(rep):
     try:
         summary["cclip_fused_speedup"] = (
             val("cclip/unfused/W=25") / val("cclip/fused/W=25")
+        )
+    except StopIteration:
+        pass
+    try:
+        summary["egress_bytes_ratio"] = (
+            val("egress/replicated/coll_bytes")
+            / max(val("egress/param_sharded/coll_bytes"), 1.0)
         )
     except StopIteration:
         pass
@@ -141,6 +203,7 @@ def main(reporter=None):
         rep.add(f"kernels/gram/W={W}", _time(ops.gram, xs, iters=3))
     sync_engine_sweep(rep, jax.random.fold_in(key, 1))
     cclip_fusion_sweep(rep, jax.random.fold_in(key, 2))
+    egress_bytes_sweep(rep)
     _write_json(rep)
     return rep
 

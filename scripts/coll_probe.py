@@ -1,4 +1,6 @@
-"""Attribute collective bytes per op for one (arch, shape) train compile."""
+"""Attribute collective bytes per op for one (arch, shape) train compile,
+then compare the packed engine's two egress modes (replicated reshard-out vs
+param-sharded unpack) on the same production mesh."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
 import re, sys, jax, jax.numpy as jnp
@@ -6,7 +8,7 @@ from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import ByzConfig
 from repro.distributed.steps import batch_shardings, input_specs, make_train_step
 from repro.launch.mesh import make_production_mesh
-from repro.launch.dryrun import _parse_shape_bytes
+from repro.launch.hlo_analysis import _parse_shape_bytes, collective_bytes
 
 arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
 agg = sys.argv[2] if len(sys.argv) > 2 else "rfa"
@@ -39,3 +41,39 @@ tot = sum(r[0] for r in rows)
 print(f"total coll bytes (scan body once): {tot/1e9:.1f} GB, {len(rows)} ops")
 for b, op, name in rows[:15]:
     print(f"{b/1e9:8.2f}GB {op:18s} {name}")
+
+# ---- egress mode comparison (replicated reshard_out vs param-sharded unpack)
+# Standalone packed sync on a synthetic FSDP-shardable tree: the egress is
+# the only difference between the two compiles, so the collective-bytes
+# delta IS the egress cost. (The train step above already uses the
+# param-sharded mode via make_train_step.)
+from repro.distributed.robust_sync import robust_gradient_sync
+from repro.distributed.sharding import param_shardings
+from repro.distributed.packing import packer_for
+
+W = mesh.shape["data"] * mesh.shape.get("pod", 1)
+k0 = jax.random.PRNGKey(0)
+tree = {
+    "wq": jnp.zeros((W, 2048, 2048), jnp.float32),
+    "wff": jnp.zeros((W, 2048, 8192), jnp.float32),
+}
+ra = byz.make_aggregator(W)
+shapes = jax.tree_util.tree_map(
+    lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+out_sh = param_shardings(shapes, mesh, fsdp=True)
+n_pad = packer_for(tree).n_pad
+
+def sync(t, k, osh=None):
+    out, _ = robust_gradient_sync(t, ra, key=k, mesh=mesh, engine="packed",
+                                  use_kernels=False, out_shardings=osh)
+    return out
+
+with mesh:
+    rep_hlo = jax.jit(sync).lower(tree, k0).compile().as_text()
+    par_hlo = jax.jit(lambda t, k: sync(t, k, out_sh)).lower(tree, k0).compile().as_text()
+rep_b, par_b = collective_bytes(rep_hlo), collective_bytes(par_hlo)
+print(f"\negress comparison ({W} workers, n_pad={n_pad}):")
+print(f"  replicated   : {sum(rep_b.values())/1e9:.3f} GB  {rep_b}"
+      f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in rep_hlo})")
+print(f"  param-sharded: {sum(par_b.values())/1e9:.3f} GB  {par_b}"
+      f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in par_hlo})")

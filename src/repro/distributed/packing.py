@@ -25,16 +25,27 @@ is insensitive to column blocking. Asserted in tests/test_packing.py.
 COLLECTIVE SCHEDULE: ``reshard_in`` lays the packed parameter dimension
 across ALL mesh axes with the worker axis replicated (one all-to-all);
 every device then computes on its identical-worker ``[W, N_pad/n_dev]``
-slice (partial Gram + a [W, W] all-reduce resolved by GSPMD); ``reshard_out``
-replicates the combined ``[N_pad]`` row (one collective) before unpacking.
-Exactly one reshard-in/reshard-out pair per sync REGARDLESS of leaf count.
+slice (partial Gram + one [W, W] all-reduce). The egress has two modes:
+``reshard_out`` replicates the combined ``[N_pad]`` row (one collective)
+before unpacking — right when the consumer is replicated (the single-host
+simulation, the flat-stack server path); or, given ``out_shardings`` (the
+params' NamedShardings from ``sharding.param_shardings``), each leaf is
+sliced straight out of the still-column-sharded row and constrained to its
+param's sharding, so the fully-replicated ``[N_pad]`` intermediate never
+materializes — the tail collective for FSDP configs becomes per-leaf
+reshards sized by what each device actually keeps. Either way the schedule
+is one ingress + one egress per sync REGARDLESS of leaf count.
 
-Kernels vs GSPMD: on a trivial mesh (absent or single-device — the
-single-host simulation, tests and benchmarks) the three phases run through
-the Pallas kernels. On a multi-device mesh the phases fall back to plain
-``jnp`` contractions that GSPMD partitions across the column sharding
-(``pallas_call`` is opaque to the partitioner); wiring ``shard_map`` around
-the kernels for the production mesh is a ROADMAP follow-up.
+Kernels vs GSPMD: the Pallas kernels now run on EVERY mesh. On a trivial
+mesh (absent or single-device — the single-host simulation, tests and
+benchmarks) the phases call the kernels directly (``kernels/ops.py``); on a
+multi-device mesh they route through ``shard_map`` wrappers
+(``distributed/shard_kernels.py``) — each device runs the kernel on its
+local column slice, with an explicit psum only for the Gram/norms phases —
+because ``pallas_call`` is opaque to GSPMD and would otherwise not
+partition. ``use_kernels=False`` selects the plain ``jnp`` contractions
+that GSPMD partitions across the column sharding (the numerics reference
+for the shard_map path, tests/test_shard_engine.py).
 """
 
 from __future__ import annotations
@@ -46,6 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aragg import RobustAggregator
+from repro.distributed import shard_kernels
 from repro.kernels import ops
 
 
@@ -157,13 +169,36 @@ def reshard_in(buf: jnp.ndarray, mesh) -> jnp.ndarray:
 
 
 def reshard_out(vec: jnp.ndarray, mesh) -> jnp.ndarray:
-    """The ONE egress collective per sync: replicate the combined packed row
-    so unpacking (and the optimizer update) see local values."""
+    """Replicated egress: one collective replicating the combined packed row
+    so unpacking (and a replicated consumer) see local values. For sharded
+    consumers prefer ``unpack_to_shardings`` (no replicated intermediate)."""
     if mesh is None:
         return vec
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     return jax.lax.with_sharding_constraint(vec, NamedSharding(mesh, P()))
+
+
+def unpack_to_shardings(packer: GradPacker, vec: jnp.ndarray,
+                        out_shardings: Any) -> Any:
+    """Param-sharded egress: slice each leaf straight out of the (still
+    column-sharded) combined row and constrain it to its param's
+    ``NamedSharding`` — the fully-replicated ``[n_pad]`` buffer of
+    ``reshard_out`` never materializes, and GSPMD emits per-leaf reshards
+    sized by what each device actually keeps (the FSDP win)."""
+    shardings = jax.tree_util.tree_leaves(out_shardings)
+    if len(shardings) != len(packer.sizes):
+        raise ValueError(
+            f"out_shardings has {len(shardings)} leaves for a "
+            f"{len(packer.sizes)}-leaf layout")
+    leaves = [
+        jax.lax.with_sharding_constraint(
+            vec[off:off + size].reshape(shape).astype(dtype), sh)
+        for off, size, shape, dtype, sh in zip(
+            packer.offsets, packer.sizes, packer.leaf_shapes,
+            packer.leaf_dtypes, shardings)
+    ]
+    return jax.tree_util.tree_unflatten(packer.treedef, leaves)
 
 
 def _mesh_is_trivial(mesh) -> bool:
@@ -178,43 +213,72 @@ def packed_robust_sync(
     mesh=None,
     block_d: int = 2048,
     use_kernels: Optional[bool] = None,
+    out_shardings: Any = None,
 ) -> Tuple[Any, dict]:
     """Aggregate per-worker gradient trees (leaves ``[W, ...]``) into one
     gradient tree on a single packed buffer. Returns ``(grads, info)``.
 
     Semantics match the per-leaf path and ``RobustAggregator`` on the
-    stacked vector; with kernels on, the result is bit-identical to the
-    per-leaf kernel oracle (tests/test_packing.py)."""
+    stacked vector; with kernels on a trivial mesh, the result is
+    bit-identical to the per-leaf kernel oracle (tests/test_packing.py).
+    ``use_kernels=None`` resolves to the kernel route on EVERY mesh
+    (shard_map-partitioned on multi-device — module docstring); pass
+    ``False`` for the plain-jnp GSPMD path. ``out_shardings`` (a tree of
+    ``NamedSharding`` matching ``grads_w`` sans worker axis) selects the
+    param-sharded egress instead of the replicated one."""
     packer = packer_for(grads_w, block_d=block_d)
     leaves = jax.tree_util.tree_leaves(grads_w)
     W = leaves[0].shape[0]
     if packer.n_params == 0:  # degenerate all-empty tree
         return packer.unpack(jnp.zeros((packer.n_pad,), jnp.float32)), {}
     if use_kernels is None:
-        use_kernels = _mesh_is_trivial(mesh)
+        use_kernels = True
+    sharded = use_kernels and not _mesh_is_trivial(mesh)
     info: dict = {}
+
+    def egress(out):
+        if out_shardings is None or mesh is None:
+            return packer.unpack(reshard_out(out, mesh))
+        return unpack_to_shardings(packer, out, out_shardings)
 
     buf = reshard_in(packer.pack(grads_w), mesh)  # [W, n_pad] fp32
 
     if aggregator.base.coordinatewise:
         mix_key = None if key is None else jax.random.split(key)[0]
         m = aggregator.mixer.matrix(mix_key, W)
-        mixed = (ops.mix_apply(m, buf, block_d=block_d) if use_kernels
-                 else m @ buf)
-        if use_kernels and aggregator.base.name == "cm":
-            out = ops.cm_aggregate(mixed, block_d=block_d)
-        else:
+        if not use_kernels:
+            mixed = m @ buf
             out = aggregator.base.combine_leaf(mixed)
-        return packer.unpack(reshard_out(out, mesh)), info
+        else:
+            mixed = (shard_kernels.mix_apply(m, buf, mesh, block_d=block_d)
+                     if sharded else ops.mix_apply(m, buf, block_d=block_d))
+            if aggregator.base.name == "cm":
+                out = (shard_kernels.cm_aggregate(mixed, mesh, block_d=block_d)
+                       if sharded else ops.cm_aggregate(mixed, block_d=block_d))
+            elif sharded:  # any other combine_leaf is column-local too
+                out = shard_kernels.coordinatewise_combine(
+                    mixed, mesh, aggregator.base.combine_leaf)
+            else:
+                out = aggregator.base.combine_leaf(mixed)
+        return egress(out), info
 
-    gram = (ops.gram(buf, block_d=block_d) if use_kernels
-            else buf @ buf.T)
+    if not use_kernels:
+        gram = buf @ buf.T
+    elif sharded:
+        gram = shard_kernels.gram(buf, mesh, block_d=block_d)
+    else:
+        gram = ops.gram(buf, block_d=block_d)
     weights = aggregator.worker_weights_from_gram(gram, key=key)
     info["agg_weights"] = weights
     info["gram_diag_mean"] = jnp.mean(jnp.diagonal(gram))
-    out = (ops.mix_apply(weights[None, :], buf, block_d=block_d)[0]
-           if use_kernels else weights @ buf)
-    return packer.unpack(reshard_out(out, mesh)), info
+    if not use_kernels:
+        out = weights @ buf
+    elif sharded:
+        out = shard_kernels.mix_apply(weights[None, :], buf, mesh,
+                                      block_d=block_d)[0]
+    else:
+        out = ops.mix_apply(weights[None, :], buf, block_d=block_d)[0]
+    return egress(out), info
 
 
 def packed_aggregate(

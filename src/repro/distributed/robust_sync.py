@@ -30,9 +30,13 @@ PACKED SCHEDULE (default, ``engine="packed"``): the whole gradient pytree
 is flattened ONCE into a padded ``[W, N_pad]`` fp32 buffer (layout cached
 per tree structure — repro/distributed/packing.py), column-resharded ONCE,
 run through the Pallas kernels (pairwise_gram / bucket_mix / cwise_median)
-on the packed buffer, and resharded back ONCE before unpacking. Exactly one
-reshard-in/reshard-out pair and one kernel launch per phase PER SYNC,
-regardless of leaf count. Traffic ~= 2x total gradient bytes.
+on the packed buffer — shard_map-partitioned on multi-device meshes, each
+device running the kernel on its local column slice with an explicit psum
+for the Gram phase (repro/distributed/shard_kernels.py) — then egressed
+ONCE: either a replicated reshard-out, or, with ``out_shardings``, a
+param-sharded unpack that never materializes the replicated ``[N_pad]``
+row (the FSDP egress). One ingress + one egress and one kernel launch per
+phase PER SYNC, regardless of leaf count. Traffic ~= 2x gradient bytes.
 
 PER-LEAF SCHEDULE (``engine="per_leaf"``, this module): the legacy
 fallback, kept as the bit-exactness oracle for the packed engine. Each leaf
@@ -104,8 +108,10 @@ def tree_combine(grads_w: Any, weights: jnp.ndarray, mesh=None,
                  use_kernels: bool = False, block_d: int = 2048) -> Any:
     """Per-leaf weighted combination over the worker axis."""
     def one(leaf):
+        if leaf.size == 0:  # guard BEFORE reshape(W, -1) / reshard
+            return jnp.zeros(leaf.shape[1:], leaf.dtype)
         flat = _colshard(leaf.reshape(leaf.shape[0], -1), mesh)
-        if use_kernels and leaf.size:
+        if use_kernels:
             out = ops.mix_apply(weights[None, :], flat, block_d=block_d)[0]
         else:
             out = weights @ _leaf32(flat)
@@ -118,8 +124,10 @@ def tree_mix(grads_w: Any, mix_matrix: jnp.ndarray, mesh=None,
              use_kernels: bool = False, block_d: int = 2048) -> Any:
     """Apply the mixing operator leaf-wise: [W, ...] -> [m, ...]."""
     def one(leaf):
+        if leaf.size == 0:  # guard BEFORE reshape(W, -1) / reshard
+            return jnp.zeros((mix_matrix.shape[0],) + leaf.shape[1:], leaf.dtype)
         flat = _colshard(leaf.reshape(leaf.shape[0], -1), mesh)
-        if use_kernels and leaf.size:
+        if use_kernels:
             out = ops.mix_apply(mix_matrix, flat, block_d=block_d)
         else:
             out = mix_matrix @ _leaf32(flat)
@@ -154,10 +162,9 @@ def _per_leaf_sync(
         # kernel route: fp32 end-to-end per leaf, CM through the median
         # kernel — mirrors the packed engine phase for phase.
         def one(leaf):
+            if leaf.size == 0:  # guard BEFORE reshape(W, -1) / reshard
+                return jnp.zeros(leaf.shape[1:], leaf.dtype)
             flat = _colshard(leaf.reshape(n_workers, -1), mesh)
-            if leaf.size == 0:
-                out = aggregator.base.combine_leaf(m @ _leaf32(flat))
-                return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
             mixed = ops.mix_apply(m, flat, block_d=block_d)
             if aggregator.base.name == "cm":
                 out = ops.cm_aggregate(mixed, block_d=block_d)
@@ -185,6 +192,7 @@ def robust_gradient_sync(
     engine: str = "packed",
     block_d: int = 2048,
     use_kernels: Optional[bool] = None,
+    out_shardings: Any = None,
 ) -> Tuple[Any, dict]:
     """Aggregate per-worker gradient trees (leaves ``[W, ...]``) into one
     gradient tree, using mixing + the robust rule. Returns (grads, info).
@@ -192,14 +200,20 @@ def robust_gradient_sync(
     ``engine="packed"`` (default) runs the single-buffer engine
     (repro/distributed/packing.py); ``engine="per_leaf"`` is the legacy
     fallback and bit-exactness oracle. ``use_kernels=None`` resolves to the
-    Pallas route on a trivial mesh for the packed engine, and to pure jnp
-    for the per-leaf engine."""
+    Pallas route on every mesh for the packed engine (shard_map-partitioned
+    on multi-device), and to pure jnp for the per-leaf engine.
+    ``out_shardings`` (NamedSharding tree matching the gradients sans
+    worker axis) selects the param-sharded egress."""
     if engine == "packed":
         return packing.packed_robust_sync(
             grads_w, aggregator, key=key, mesh=mesh, block_d=block_d,
-            use_kernels=use_kernels,
+            use_kernels=use_kernels, out_shardings=out_shardings,
         )
     if engine != "per_leaf":
         raise ValueError(f"unknown sync engine {engine!r}")
-    return _per_leaf_sync(grads_w, aggregator, key, mesh,
-                          bool(use_kernels), block_d)
+    out, info = _per_leaf_sync(grads_w, aggregator, key, mesh,
+                               bool(use_kernels), block_d)
+    if out_shardings is not None and mesh is not None:
+        out = jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, out, out_shardings)
+    return out, info

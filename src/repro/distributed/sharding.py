@@ -95,6 +95,27 @@ def batch_spec(mesh: Mesh) -> P:
     return P(w if len(w) > 1 else (w[0] if w else None))
 
 
+def worker_grad_spec(param_sharding: NamedSharding, mesh: Mesh) -> NamedSharding:
+    """Sharding for a [W, ...]-stacked gradient leaf: worker axes on dim 0,
+    the param's 'model' placements kept, its FSDP placements dropped."""
+    from repro.launch.mesh import worker_axes
+
+    w = worker_axes(mesh)
+    base = param_sharding.spec
+    kept = tuple(s if s == "model" else None for s in base)
+    return NamedSharding(mesh, P(w if len(w) > 1 else w[0], *kept))
+
+
+def constrain_worker_tree(tree, params_sh, mesh: Mesh):
+    """Constrain each [W, ...] leaf of ``tree`` to its worker-stacked spec."""
+    return jax.tree_util.tree_map(
+        lambda leaf, sh: jax.lax.with_sharding_constraint(
+            leaf, worker_grad_spec(sh, mesh)),
+        tree,
+        params_sh,
+    )
+
+
 def cache_shardings(cache, mesh: Mesh, batch: int):
     """Decode-cache shardings. Leaves: [period, B, L, KV, dh] (attn k/v),
     [period, B, K-1, C] (conv), [period, B, H, P, N] (ssm state)."""

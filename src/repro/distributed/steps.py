@@ -28,8 +28,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ByzConfig, InputShape, ModelConfig
 from repro.distributed.robust_sync import robust_gradient_sync
-from repro.distributed.sharding import batch_spec, cache_shardings, param_shardings
-from repro.launch.mesh import n_workers as mesh_n_workers, worker_axes
+from repro.distributed.sharding import (
+    batch_spec,
+    cache_shardings,
+    constrain_worker_tree,
+    param_shardings,
+    worker_grad_spec,
+)
+from repro.launch.mesh import n_workers as mesh_n_workers
 from repro.models import transformer as tfm
 from repro.optim import make_optimizer
 
@@ -73,24 +79,6 @@ def batch_shardings(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, Name
     return out
 
 
-# ----------------------------------------------------------- tree helpers
-def _worker_grad_spec(param_sharding: NamedSharding, mesh) -> NamedSharding:
-    """Sharding for a [W, ...]-stacked gradient leaf: worker axes on dim 0,
-    the param's 'model' placements kept, its FSDP placements dropped."""
-    w = worker_axes(mesh)
-    base = param_sharding.spec
-    kept = tuple(s if s == "model" else None for s in base)
-    return NamedSharding(mesh, P(w if len(w) > 1 else w[0], *kept))
-
-
-def constrain_worker_tree(tree, params_sh, mesh):
-    return jax.tree_util.tree_map(
-        lambda leaf, sh: jax.lax.with_sharding_constraint(leaf, _worker_grad_spec(sh, mesh)),
-        tree,
-        params_sh,
-    )
-
-
 # -------------------------------------------------------------- train step
 def make_train_step(
     cfg: ModelConfig,
@@ -113,6 +101,16 @@ def make_train_step(
     )
     use_worker_momentum = cfg.momentum_mode == "worker" and byz.worker_momentum > 0
     is_plain_mean = byz.aggregator in ("mean", "avg") and byz.mixing in ("none", "")
+
+    # Param shardings are needed INSIDE step_fn: for FSDP configs the packed
+    # engine's egress unpacks the aggregate directly to each param's
+    # NamedSharding instead of materializing a replicated [n_pad] row on
+    # every device. Non-FSDP params are (near-)replicated, where per-leaf
+    # unpacking just splits the one egress all-gather into many — keep the
+    # replicated reshard_out there.
+    params_shape = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    params_sh = param_shardings(params_shape, mesh, fsdp=cfg.fsdp)
+    egress_sh = params_sh if cfg.fsdp else None
 
     def loss_of(params, b):
         return tfm.loss_fn(params, cfg, b)
@@ -150,16 +148,16 @@ def make_train_step(
                 messages = worker_m
             else:
                 messages = grads_w
-            agg_grads, info = robust_gradient_sync(messages, aggregator, key=key,
-                                                   mesh=mesh, engine="packed")
+            agg_grads, info = robust_gradient_sync(
+                messages, aggregator, key=key, mesh=mesh, engine="packed",
+                out_shardings=egress_sh,
+            )
 
         params, opt_state = opt_update(agg_grads, opt_state, params)
         metrics = {"loss": loss}
         return params, opt_state, worker_m, metrics
 
-    # ----- shardings
-    params_shape = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
-    params_sh = param_shardings(params_shape, mesh, fsdp=cfg.fsdp)
+    # ----- shardings (params_sh computed above, before step_fn)
     opt_shape = jax.eval_shape(opt_init, params_shape)
     # optimizer moments mirror param shardings; step counter replicated
     opt_sh = _opt_state_shardings(opt_shape, params_sh, mesh)
@@ -170,7 +168,7 @@ def make_train_step(
             ),
             params_shape,
         )
-        wm_sh = jax.tree_util.tree_map(lambda sh: _worker_grad_spec(sh, mesh), params_sh)
+        wm_sh = jax.tree_util.tree_map(lambda sh: worker_grad_spec(sh, mesh), params_sh)
     else:
         wm_shape, wm_sh = {}, {}
 

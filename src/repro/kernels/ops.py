@@ -11,8 +11,16 @@ in tests/test_kernels.py):
   gram(xs, acc=...)           stats phase for Krum / RFA / CCLIP
   cm_aggregate(xs)            full coordinate-wise median
   mix_apply(M, xs)            bucketing / resampling application
+  norms(xs, c | center=v)     residual sq-norms (Weiszfeld / CCLIP inner loop)
+  cclip_iter(xs, v, lam)      one fused CCLIP iteration (combine + next norms)
   rfa_aggregate(xs)           smoothed Weiszfeld via fused residual-norm passes
   cclip_aggregate(xs, tau)    centered clipping, ONE fused HBM pass/iteration
+
+Everything here is SINGLE-DEVICE: inside a jit, GSPMD cannot partition a
+``pallas_call``, so on a multi-device mesh these wrappers would run the
+whole array on every device. The mesh-partitioned counterparts (each device
+running the kernel on its local column slice, with explicit psums for the
+reducing phases) live in ``repro.distributed.shard_kernels``.
 
 ``cclip_aggregate`` runs each iteration through ``cclip_fused_iter``
 (combine + next-iteration norms in one streaming pass); the pre-fusion
@@ -53,6 +61,19 @@ def cm_aggregate(xs: jnp.ndarray, *, block_d: int = 1024) -> jnp.ndarray:
 
 def mix_apply(mix: jnp.ndarray, xs: jnp.ndarray, *, block_d: int = 2048) -> jnp.ndarray:
     return bucket_mix(mix, xs, block_d=block_d, interpret=_interp())
+
+
+def norms(xs: jnp.ndarray, coeffs: jnp.ndarray | None = None, *,
+          center: jnp.ndarray | None = None, block_d: int = 2048) -> jnp.ndarray:
+    """Residual sq-norms ``||x_i - v||^2`` with v as coeffs or explicit row."""
+    return residual_norms(xs, coeffs, center=center, block_d=block_d,
+                          interpret=_interp())
+
+
+def cclip_iter(xs: jnp.ndarray, v: jnp.ndarray, lam: jnp.ndarray, *,
+               block_d: int = 2048):
+    """One fused CCLIP iteration -> ``(v', ||x_i - v'||^2)``."""
+    return cclip_fused_iter(xs, v, lam, block_d=block_d, interpret=_interp())
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "block_d"))

@@ -25,7 +25,6 @@ the real single device.
 
 import argparse
 import json
-import re
 import sys
 import time
 from typing import Dict, Optional
@@ -43,6 +42,12 @@ from repro.distributed.steps import (
     make_serve_step,
     make_train_step,
 )
+from repro.launch.hlo_analysis import (  # noqa: F401 - re-exported
+    COLLECTIVE_OPS,
+    _DTYPE_BYTES,
+    _parse_shape_bytes,
+    collective_bytes,
+)
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tfm
 
@@ -50,53 +55,6 @@ from repro.models import transformer as tfm
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9       # bytes/s per chip
 ICI_BW = 50e9        # bytes/s per link
-
-_DTYPE_BYTES = {
-    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
-    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8, "u64": 8,
-}
-
-_COLLECTIVE_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?([a-z0-9_]+(?:\([^)]*\))?[^=]*?)\s*"
-)
-
-
-def _parse_shape_bytes(shape_str: str) -> int:
-    """Total bytes of an HLO shape string like 'bf16[4,128]{1,0}' or a tuple."""
-    total = 0
-    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
-        dt, dims = m.group(1), m.group(2)
-        nbytes = _DTYPE_BYTES.get(dt)
-        if nbytes is None:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * nbytes
-    return total
-
-
-COLLECTIVE_OPS = (
-    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-    "collective-permute", "all-gather-start", "all-reduce-start",
-)
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum output-shape bytes of every collective op in the HLO text."""
-    out: Dict[str, int] = {}
-    for line in hlo_text.splitlines():
-        stripped = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^\s]+)\s+([a-z\-]+)\(", stripped)
-        if not m:
-            continue
-        shape_str, opname = m.group(1), m.group(2)
-        if opname in COLLECTIVE_OPS:
-            key = opname.replace("-start", "")
-            out[key] = out.get(key, 0) + _parse_shape_bytes(shape_str)
-    return out
 
 
 def roofline_terms(flops: float, bytes_hbm: float, coll: Dict[str, int], n_chips: int):

@@ -1,0 +1,61 @@
+"""Import-safe HLO text analysis helpers.
+
+These used to live in ``repro.launch.dryrun``, but that module mutates
+``XLA_FLAGS`` (forcing 512 host devices) at import time, so tests and
+benchmarks could not reuse its parsers without hijacking their own device
+topology. This module has NO import side effects: it only parses compiled
+HLO text (``compiled.as_text()``).
+
+  collective_bytes(hlo)  — per-op-kind byte totals of every collective
+  _parse_shape_bytes(s)  — bytes of an HLO shape string like 'bf16[4,128]'
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8, "u64": 8,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+)
+
+
+def _parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[4,128]{1,0}' or a tuple."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in the HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^\s]+)\s+([a-z\-]+)\(",
+            stripped,
+        )
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        if opname in COLLECTIVE_OPS:
+            key = opname.replace("-start", "")
+            out[key] = out.get(key, 0) + _parse_shape_bytes(shape_str)
+    return out

@@ -113,8 +113,13 @@ def moe_layer(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
         out = out + mlp_block(p[f"shared_{i}"], xt, cfg.mlp_kind)
 
     # ---- aux losses
-    # switch load-balance: E * sum_e f_e * P_e
-    f_e = counts.astype(jnp.float32) / (T * K)
+    # switch load-balance: E * sum_e f_e * P_e, with f_e the fraction of
+    # tokens whose TOP-1 expert is e (Switch eq. 4). Counting all top-K
+    # assignments instead dilutes f_e toward 1/E — with K=E every router,
+    # collapsed or balanced, would score lb_loss ≈ 1 and the loss would
+    # stop penalizing collapse.
+    top1 = jnp.bincount(idx_topk[:, 0], length=E)
+    f_e = top1.astype(jnp.float32) / T
     p_e = jnp.mean(gates_all, axis=0)
     lb_loss = E * jnp.sum(f_e * p_e)
     z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))

@@ -62,7 +62,7 @@ class CrossDeviceSim:
     @partial(jax.jit, static_argnums=0)
     def step(self, state: CrossDeviceState, data_x, data_y, key) -> Tuple[
             CrossDeviceState, Dict]:
-        k_sample, k_batch, k_agg = jax.random.split(key, 3)
+        k_sample, k_batch, k_attack, k_agg = jax.random.split(key, 4)
         # sample a cohort (with replacement — simple and unbiased)
         cohort = jax.random.randint(
             k_sample, (self.clients_per_round,), 0, self.n_clients)
@@ -77,8 +77,11 @@ class CrossDeviceSim:
         grads = jax.vmap(self.grad_fn, in_axes=(None, 0, 0))(state.params, bx, by)
         g_flat = stack_flatten_workers(grads).astype(jnp.float32)
 
-        # attacks are stateless here (no persistent cohort across rounds)
-        sent, _ = self.attack(g_flat, byz_mask, None, key=k_agg)
+        # attacks are stateless here (no persistent cohort across rounds).
+        # k_attack is dedicated: feeding the aggregator's key to the attack
+        # would correlate attacker randomness with the defense's resampling
+        # permutation — an accidentally permutation-aware adversary.
+        sent, _ = self.attack(g_flat, byz_mask, None, key=k_attack)
         # the cohort stack is already flat, so the packed engine applies
         # directly: kernel-routed mixing + rule on one padded buffer.
         agg = packed_aggregate(sent, self.aggregator, key=k_agg)

@@ -51,6 +51,46 @@ def test_cross_device_defends_ipm_with_acclip(pool):
     assert _run(pool, "ipm", agg="acclip") > 0.7
 
 
+def test_attack_key_independent_of_aggregator_key(pool):
+    """Regression: ``step`` used to pass the SAME split (k_agg) to both the
+    attack and the aggregation — a correlated attacker that effectively
+    observes the defense's resampling permutation. The attack must get its
+    own dedicated split."""
+    from repro.training import cross_device as cd
+
+    wx, wy, *_ = pool
+    byz = ByzConfig(aggregator="rfa", mixing="resampling", s=2, attack="alie",
+                    attack_kwargs=(("n", 10), ("f", 2)), n_byzantine=0)
+    sim = CrossDeviceSim(loss_fn=nll_loss, byz=byz, n_clients=50,
+                         byz_frac=0.1, clients_per_round=10, lr=0.1)
+    state = sim.init_state(init_mlp(jax.random.PRNGKey(1)))
+
+    seen = {}
+    real_attack = sim.attack
+    real_agg = cd.packed_aggregate
+
+    def spy_attack(xs, byz_mask, st=None, key=None):
+        seen["attack"] = key
+        return real_attack(xs, byz_mask, st, key=key)
+
+    def spy_agg(xs, aggregator, key=None, **kw):
+        seen["agg"] = key
+        return real_agg(xs, aggregator, key=key, **kw)
+
+    sim.attack = spy_attack
+    cd.packed_aggregate, orig = spy_agg, cd.packed_aggregate
+    try:
+        # run the undecorated step (eager) so the spies see concrete keys
+        sim.step.__wrapped__(sim, state, wx, wy, jax.random.PRNGKey(3))
+    finally:
+        cd.packed_aggregate = orig
+        sim.attack = real_attack
+
+    assert seen["attack"] is not None and seen["agg"] is not None
+    assert not np.array_equal(np.asarray(seen["attack"]),
+                              np.asarray(seen["agg"]))
+
+
 def test_cohort_byzantine_count_matches_pool_fraction(pool):
     wx, wy, *_ = pool
     byz = ByzConfig(aggregator="mean", attack="none")

@@ -62,6 +62,67 @@ def test_packer_layout_is_cached(key):
     assert packer_for(tree, block_d=BLOCK_D) is not packer_for(tree, block_d=512)
 
 
+def test_packer_cache_distinct_for_dtype_and_block(key):
+    """Trees that differ ONLY in a leaf dtype (or in block_d) must map to
+    distinct cached layouts — dtype drives the unpack cast."""
+    tree32 = {"a": jnp.zeros((4, 37), jnp.float32),
+              "b": jnp.zeros((4, 5, 3), jnp.float32)}
+    tree16 = {"a": tree32["a"], "b": tree32["b"].astype(jnp.bfloat16)}
+    p32 = packer_for(tree32, block_d=BLOCK_D)
+    p16 = packer_for(tree16, block_d=BLOCK_D)
+    assert p32 is not p16
+    assert p16.leaf_dtypes[1] == jnp.bfloat16
+    assert packer_for(tree32, block_d=2 * BLOCK_D) is not p32
+    # same shapes+dtypes+block -> the SAME object
+    assert packer_for({k: v + 1 for k, v in tree32.items()},
+                      block_d=BLOCK_D) is p32
+
+
+def test_packer_built_once_across_syncs_in_one_trace(key, monkeypatch):
+    """Two packed_robust_sync calls on the same tree structure inside ONE
+    jit trace must hit the layout cache — GradPacker is built at most once
+    (zero times if a previous test already cached this layout; use a unique
+    shape so the first call builds)."""
+    builds = {"n": 0}
+    orig_init = packing.GradPacker.__init__
+
+    def counting_init(self, *a, **kw):
+        builds["n"] += 1
+        orig_init(self, *a, **kw)
+
+    monkeypatch.setattr(packing.GradPacker, "__init__", counting_init)
+    tree = _f32_tree(key, W=5, sizes=((131,), (9, 3)))  # unique layout
+    ra = RobustAggregator.from_spec("cm", mixing="bucketing", s=2)
+
+    @jax.jit
+    def two_syncs(t, k):
+        o1, _ = packing.packed_robust_sync(t, ra, key=k, block_d=BLOCK_D)
+        o2, _ = packing.packed_robust_sync(t, ra, key=k, block_d=BLOCK_D)
+        return o1, o2
+
+    two_syncs(tree, jax.random.PRNGKey(0))
+    assert builds["n"] == 1
+
+
+@pytest.mark.parametrize("engine", ["packed", "per_leaf"])
+@pytest.mark.parametrize("use_kernels", [True, False])
+def test_empty_leaf_through_both_engines(key, engine, use_kernels):
+    """A zero-size leaf inside an otherwise normal tree must pass through
+    both engines (guarded before any reshape/reshard) and come back as a
+    zero array of the right trailing shape."""
+    tree = {"a": jax.random.normal(key, (6, 40), jnp.float32),
+            "empty": jnp.zeros((6, 2, 0), jnp.float32),
+            "b": jax.random.normal(key, (6, 3, 5), jnp.float32)}
+    for agg in ("rfa", "cm"):
+        ra = RobustAggregator.from_spec(agg, mixing="bucketing", s=2)
+        out, _ = robust_gradient_sync(tree, ra, key=jax.random.PRNGKey(1),
+                                      engine=engine, block_d=BLOCK_D,
+                                      use_kernels=use_kernels)
+        assert out["empty"].shape == (2, 0)
+        assert out["a"].shape == (40,) and out["b"].shape == (3, 5)
+        assert np.all(np.isfinite(np.asarray(out["a"])))
+
+
 def test_empty_tree_degenerate():
     tree = {"e": jnp.zeros((4, 0), jnp.float32)}
     ra = RobustAggregator.from_spec("rfa", mixing="none")

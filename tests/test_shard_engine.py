@@ -1,0 +1,246 @@
+"""shard_map-partitioned kernel engine (distributed/shard_kernels.py) and the
+param-sharded egress (packing.unpack_to_shardings) on a FORCED multi-device
+host platform.
+
+jax locks the device count at first init, and conftest deliberately does NOT
+force it (every other test file sees the real single device). So this module
+runs its real assertions only when >= 8 devices exist, and otherwise a single
+launcher test re-invokes pytest on this file in a subprocess with
+``--xla_force_host_platform_device_count=8`` — the pattern the quick CI job
+uses directly.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+MULTI = jax.device_count() >= 8
+
+pytestmark = pytest.mark.skipif(
+    not MULTI and os.environ.get("_SHARD_ENGINE_CHILD") == "1",
+    reason="child process failed to force 8 host devices",
+)
+
+
+def test_relaunch_on_forced_8_device_host():
+    """Single-device launcher: run this file's real tests on 8 forced CPU
+    devices in a child process."""
+    if MULTI:
+        pytest.skip("already multi-device; real tests run directly")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    env["_SHARD_ENGINE_CHILD"] = "1"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", __file__,
+         "--deselect", f"{__file__}::test_relaunch_on_forced_8_device_host"],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    assert proc.returncode == 0, (
+        f"forced-8-device run failed:\n{proc.stdout[-4000:]}\n"
+        f"{proc.stderr[-2000:]}")
+
+
+if MULTI:
+    from repro.core.aragg import RobustAggregator
+    from repro.distributed import packing, shard_kernels
+    from repro.distributed.robust_sync import robust_gradient_sync
+    from repro.distributed.sharding import param_shardings
+    from repro.kernels import ops
+    from repro.launch.hlo_analysis import collective_bytes
+    from repro.launch.mesh import make_host_mesh
+
+    BLOCK_D = 256
+    W = 8
+
+    def _mesh():
+        return make_host_mesh(data=4, model=2)
+
+    def _tree(key, W=W):
+        ks = jax.random.split(key, 3)
+        return {
+            "w": jax.random.normal(ks[0], (W, 16, 48), jnp.float32),
+            "b": jax.random.normal(ks[1], (W, 33), jnp.float32),
+            "v": jax.random.normal(ks[2], (W, 257), jnp.float32),
+        }
+
+    def _stack(key, d=1111):
+        return jax.random.normal(key, (W, d), jnp.float32)
+
+    # -------------------------------------------- sharded kernel primitives
+    def test_sharded_gram_matches_single_device(key):
+        xs = _stack(key)
+        mesh = _mesh()
+        got = jax.jit(lambda b: shard_kernels.gram(b, mesh, block_d=BLOCK_D))(xs)
+        want = xs @ xs.T
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_sharded_mix_apply_matches_single_device(key):
+        xs = _stack(key)
+        m = jax.random.normal(jax.random.PRNGKey(1), (5, W), jnp.float32)
+        mesh = _mesh()
+        got = jax.jit(
+            lambda mm, b: shard_kernels.mix_apply(mm, b, mesh, block_d=BLOCK_D)
+        )(m, xs)
+        np.testing.assert_allclose(got, m @ xs, rtol=1e-5, atol=1e-5)
+        assert got.shape == xs.shape[:0] + (5, xs.shape[1])
+
+    def test_sharded_cm_matches_single_device(key):
+        xs = _stack(key)
+        mesh = _mesh()
+        got = jax.jit(lambda b: shard_kernels.cm_aggregate(b, mesh,
+                                                           block_d=BLOCK_D))(xs)
+        np.testing.assert_allclose(got, jnp.median(xs, axis=0),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_sharded_residual_norms_both_forms(key):
+        xs = _stack(key)
+        mesh = _mesh()
+        coeffs = jax.nn.softmax(jnp.arange(W, dtype=jnp.float32))
+        center = coeffs @ xs
+        want = jnp.sum((xs - center[None, :]) ** 2, axis=1)
+        got_c = jax.jit(lambda b, c: shard_kernels.residual_norms(
+            b, c, mesh=mesh, block_d=BLOCK_D))(xs, coeffs)
+        got_v = jax.jit(lambda b, v: shard_kernels.residual_norms(
+            b, center=v, mesh=mesh, block_d=BLOCK_D))(xs, center)
+        np.testing.assert_allclose(got_c, want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_v, want, rtol=1e-4, atol=1e-4)
+
+    def test_sharded_cclip_iter_matches_single_device(key):
+        xs = _stack(key)
+        mesh = _mesh()
+        v = jnp.mean(xs, axis=0)
+        lam = jnp.minimum(
+            1.0, 3.0 / jnp.sqrt(jnp.sum((xs - v) ** 2, axis=1) + 1e-12))
+        v_ref, r2_ref = ops.cclip_iter(xs, v, lam, block_d=BLOCK_D)
+        v_got, r2_got = jax.jit(lambda b, vv, ll: shard_kernels.cclip_fused_iter(
+            b, vv, ll, mesh, block_d=BLOCK_D))(xs, v, lam)
+        np.testing.assert_allclose(v_got, v_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(r2_got, r2_ref, rtol=1e-4, atol=1e-4)
+
+    def test_sharded_compositions_match_single_device(key):
+        xs = _stack(key)
+        mesh = _mesh()
+        np.testing.assert_allclose(
+            jax.jit(lambda b: shard_kernels.rfa_aggregate(b, mesh,
+                                                          block_d=BLOCK_D))(xs),
+            ops.rfa_aggregate(xs, block_d=BLOCK_D), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            jax.jit(lambda b: shard_kernels.cclip_aggregate(
+                b, 3.0, mesh, block_d=BLOCK_D))(xs),
+            ops.cclip_aggregate(xs, 3.0, block_d=BLOCK_D),
+            rtol=1e-4, atol=1e-4)
+
+    # ------------------------------------------------- engine: kernels vs jnp
+    RULES = [
+        ("krum", {"n_byzantine": 2}),
+        ("rfa", {}),
+        ("cclip", {"tau": 3.0}),
+        ("cm", {}),
+        ("tm", {"n_trim": 2}),
+        ("mean", {}),
+    ]
+    MIXINGS = ["none", "bucketing", "resampling"]
+
+    @pytest.mark.parametrize("agg,kwargs", RULES, ids=[r[0] for r in RULES])
+    @pytest.mark.parametrize("mixing", MIXINGS)
+    def test_kernel_path_matches_gspmd_jnp_path(key, agg, kwargs, mixing):
+        """On a real multi-device mesh the shard_map kernel route must agree
+        with the GSPMD-partitioned jnp route to fp32 tolerance (per-device
+        block order differs, so not bit-for-bit)."""
+        tree = _tree(key)
+        mesh = _mesh()
+        ra = RobustAggregator.from_spec(agg, mixing=mixing, s=2, **kwargs)
+        agg_key = jax.random.PRNGKey(11)
+        with mesh:
+            out_k, _ = jax.jit(lambda t, k: robust_gradient_sync(
+                t, ra, key=k, mesh=mesh, engine="packed", block_d=BLOCK_D,
+                use_kernels=True))(tree, agg_key)
+            out_j, _ = jax.jit(lambda t, k: robust_gradient_sync(
+                t, ra, key=k, mesh=mesh, engine="packed", block_d=BLOCK_D,
+                use_kernels=False))(tree, agg_key)
+        for lk, lj in zip(jax.tree_util.tree_leaves(out_k),
+                          jax.tree_util.tree_leaves(out_j)):
+            np.testing.assert_allclose(np.asarray(lk), np.asarray(lj),
+                                       rtol=5e-4, atol=5e-4)
+
+    def test_no_silent_jnp_fallback_on_multi_device_mesh(key, monkeypatch):
+        """use_kernels=True on a non-trivial mesh must route through the
+        shard_map wrappers — the pre-PR behavior silently used jnp."""
+        tree = _tree(key)
+        mesh = _mesh()
+        hits = {"gram": 0, "mix": 0, "cm": 0}
+        og, om, oc = (shard_kernels.gram, shard_kernels.mix_apply,
+                      shard_kernels.cm_aggregate)
+        monkeypatch.setattr(packing.shard_kernels, "gram",
+                            lambda *a, **k: hits.__setitem__("gram", hits["gram"] + 1) or og(*a, **k))
+        monkeypatch.setattr(packing.shard_kernels, "mix_apply",
+                            lambda *a, **k: hits.__setitem__("mix", hits["mix"] + 1) or om(*a, **k))
+        monkeypatch.setattr(packing.shard_kernels, "cm_aggregate",
+                            lambda *a, **k: hits.__setitem__("cm", hits["cm"] + 1) or oc(*a, **k))
+        k = jax.random.PRNGKey(0)
+        ra = RobustAggregator.from_spec("rfa", mixing="bucketing", s=2)
+        robust_gradient_sync(tree, ra, key=k, mesh=mesh, engine="packed",
+                             block_d=BLOCK_D, use_kernels=True)
+        assert hits["gram"] == 1 and hits["mix"] == 1  # stats + combine
+        ra_cm = RobustAggregator.from_spec("cm", mixing="bucketing", s=2)
+        robust_gradient_sync(tree, ra_cm, key=k, mesh=mesh, engine="packed",
+                             block_d=BLOCK_D, use_kernels=True)
+        assert hits["cm"] == 1 and hits["mix"] == 2  # + mixing phase
+
+    # ------------------------------------------------- param-sharded egress
+    def test_param_sharded_egress_skips_replicated_buffer(key):
+        """With out_shardings, the compiled HLO must not materialize the
+        fully-replicated [n_pad] row, and egress collective bytes shrink.
+
+        Every leaf here is FSDP-shardable (divisible by both mesh axes) —
+        the case the param-sharded egress exists for. A leaf whose sharding
+        comes out replicated still needs a gather of its own slice, and XLA
+        may widen that to the full row."""
+        mesh = _mesh()
+        ks = jax.random.split(key, 3)
+        tree = {
+            "w": jax.random.normal(ks[0], (W, 16, 48), jnp.float32),
+            "b": jax.random.normal(ks[1], (W, 8, 64), jnp.float32),
+            "v": jax.random.normal(ks[2], (W, 4, 256), jnp.float32),
+        }
+        ra = RobustAggregator.from_spec("rfa", mixing="bucketing", s=2)
+        packer = packing.packer_for(tree, block_d=BLOCK_D)
+        n_pad = packer.n_pad
+        shapes = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+        out_sh = param_shardings(shapes, mesh, fsdp=True)
+
+        def sync(t, k, out_shardings=None):
+            out, _ = robust_gradient_sync(
+                t, ra, key=k, mesh=mesh, engine="packed", block_d=BLOCK_D,
+                use_kernels=False, out_shardings=out_shardings)
+            return out
+
+        k = jax.random.PRNGKey(5)
+        with mesh:
+            rep = jax.jit(sync).lower(tree, k).compile()
+            par = jax.jit(
+                lambda t, kk: sync(t, kk, out_shardings=out_sh)
+            ).lower(tree, k).compile()
+        rep_hlo, par_hlo = rep.as_text(), par.as_text()
+        assert f"f32[{n_pad}]" in rep_hlo          # replicated egress row
+        assert f"f32[{n_pad}]" not in par_hlo      # never materialized
+        rep_bytes = sum(collective_bytes(rep_hlo).values())
+        par_bytes = sum(collective_bytes(par_hlo).values())
+        assert par_bytes < rep_bytes
+        # and the values agree
+        with mesh:
+            o_rep = jax.jit(sync)(tree, k)
+            o_par = jax.jit(lambda t, kk: sync(t, kk, out_shardings=out_sh))(tree, k)
+        for a, b in zip(jax.tree_util.tree_leaves(o_rep),
+                        jax.tree_util.tree_leaves(o_par)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
