@@ -1,79 +1,99 @@
 """Attribute collective bytes per op for one (arch, shape) train compile,
 then compare the packed engine's two egress modes (replicated reshard-out vs
-param-sharded unpack) on the same production mesh."""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
-import re, sys, jax, jax.numpy as jnp
-from repro.configs import INPUT_SHAPES, get_config
-from repro.configs.base import ByzConfig
-from repro.distributed.steps import batch_shardings, input_specs, make_train_step
-from repro.launch.mesh import make_production_mesh
-from repro.launch.hlo_analysis import _parse_shape_bytes, collective_bytes
+param-sharded unpack) on the same production mesh.
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
-agg = sys.argv[2] if len(sys.argv) > 2 else "rfa"
-byz = ByzConfig(aggregator=agg, mixing="bucketing", s=2, worker_momentum=0.9, delta=0.1)
-cfg = get_config(arch)
-shape = INPUT_SHAPES["train_4k"]
-mesh = make_production_mesh()
-specs = input_specs(cfg, shape)
-b_sh = batch_shardings(cfg, shape, mesh)
-with mesh:
-    step_fn, sh = make_train_step(cfg, byz, mesh)
-    jitted = jax.jit(step_fn,
-        in_shardings=(sh["params"], sh["opt_state"], sh["worker_m"], sh["replicated"], b_sh),
-        out_shardings=(sh["params"], sh["opt_state"], sh["worker_m"], sh["replicated"]))
-    compiled = jitted.lower(sh["params_shape"], sh["opt_shape"], sh["wm_shape"],
-                            jax.ShapeDtypeStruct((2,), jnp.uint32), specs).compile()
-hlo = compiled.as_text()
-rows = []
-for line in hlo.splitlines():
-    m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^\s]+)\s+([a-z\-]+)\(", line.strip())
-    if not m:
-        continue
-    shape_str, op = m.group(1), m.group(2)
-    if op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-              "collective-permute", "all-gather-start", "all-reduce-start"):
-        mm = re.search(r'op_name="([^"]*)"', line)
-        rows.append((_parse_shape_bytes(shape_str), op, (mm.group(1) if mm else "?")[:100]))
-rows.sort(reverse=True)
-tot = sum(r[0] for r in rows)
-print(f"total coll bytes (scan body once): {tot/1e9:.1f} GB, {len(rows)} ops")
-for b, op, name in rows[:15]:
-    print(f"{b/1e9:8.2f}GB {op:18s} {name}")
+All work lives in ``main()``: the 512 placeholder host devices are forced
+via ``repro.launch.dryrun.activate()`` right before the first backend init,
+never at import time (ast-import-env-mutation).
+"""
+import sys
 
-# ---- egress mode comparison (replicated reshard_out vs param-sharded unpack)
-# Standalone packed sync on a synthetic FSDP-shardable tree: the egress is
-# the only difference between the two compiles, so the collective-bytes
-# delta IS the egress cost. (The train step above already uses the
-# param-sharded mode via make_train_step.)
-from repro.distributed.robust_sync import robust_gradient_sync
-from repro.distributed.sharding import param_shardings
-from repro.distributed.packing import packer_for
 
-W = mesh.shape["data"] * mesh.shape.get("pod", 1)
-k0 = jax.random.PRNGKey(0)
-tree = {
-    "wq": jnp.zeros((W, 2048, 2048), jnp.float32),
-    "wff": jnp.zeros((W, 2048, 8192), jnp.float32),
-}
-ra = byz.make_aggregator(W)
-shapes = jax.tree_util.tree_map(
-    lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
-out_sh = param_shardings(shapes, mesh, fsdp=True)
-n_pad = packer_for(tree).n_pad
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    from repro.launch.dryrun import activate
 
-def sync(t, k, osh=None):
-    out, _ = robust_gradient_sync(t, ra, key=k, mesh=mesh, engine="packed",
-                                  use_kernels=False, out_shardings=osh)
-    return out
+    activate()
+    import re
 
-with mesh:
-    rep_hlo = jax.jit(sync).lower(tree, k0).compile().as_text()
-    par_hlo = jax.jit(lambda t, k: sync(t, k, out_sh)).lower(tree, k0).compile().as_text()
-rep_b, par_b = collective_bytes(rep_hlo), collective_bytes(par_hlo)
-print(f"\negress comparison ({W} workers, n_pad={n_pad}):")
-print(f"  replicated   : {sum(rep_b.values())/1e9:.3f} GB  {rep_b}"
-      f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in rep_hlo})")
-print(f"  param-sharded: {sum(par_b.values())/1e9:.3f} GB  {par_b}"
-      f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in par_hlo})")
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.configs.base import ByzConfig
+    from repro.distributed.packing import packer_for
+    from repro.distributed.robust_sync import robust_gradient_sync
+    from repro.distributed.sharding import param_shardings
+    from repro.distributed.steps import batch_shardings, input_specs, make_train_step
+    from repro.launch.hlo_analysis import collective_bytes, iter_collectives
+    from repro.launch.mesh import make_production_mesh
+
+    arch = argv[0] if len(argv) > 0 else "tinyllama-1.1b"
+    agg = argv[1] if len(argv) > 1 else "rfa"
+    byz = ByzConfig(aggregator=agg, mixing="bucketing", s=2,
+                    worker_momentum=0.9, delta=0.1)
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES["train_4k"]
+    mesh = make_production_mesh()
+    specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, mesh)
+    with mesh:
+        step_fn, sh = make_train_step(cfg, byz, mesh)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(sh["params"], sh["opt_state"], sh["worker_m"],
+                          sh["replicated"], b_sh),
+            out_shardings=(sh["params"], sh["opt_state"], sh["worker_m"],
+                           sh["replicated"]))
+        compiled = jitted.lower(sh["params_shape"], sh["opt_shape"],
+                                sh["wm_shape"],
+                                jax.ShapeDtypeStruct((2,), jnp.uint32),
+                                specs).compile()
+    hlo = compiled.as_text()
+    hlo_lines = hlo.splitlines()
+    rows = []
+    for kind, nbytes, line_no in iter_collectives(hlo):
+        mm = re.search(r'op_name="([^"]*)"', hlo_lines[line_no - 1])
+        rows.append((nbytes, kind, (mm.group(1) if mm else "?")[:100]))
+    rows.sort(reverse=True)
+    tot = sum(r[0] for r in rows)
+    print(f"total coll bytes (scan body once): {tot/1e9:.1f} GB, {len(rows)} ops")
+    for b, op, name in rows[:15]:
+        print(f"{b/1e9:8.2f}GB {op:18s} {name}")
+
+    # ---- egress mode comparison (replicated reshard_out vs param-sharded)
+    # Standalone packed sync on a synthetic FSDP-shardable tree: the egress
+    # is the only difference between the two compiles, so the
+    # collective-bytes delta IS the egress cost. (The train step above
+    # already uses the param-sharded mode via make_train_step.)
+    W = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    k0 = jax.random.PRNGKey(0)
+    tree = {
+        "wq": jnp.zeros((W, 2048, 2048), jnp.float32),
+        "wff": jnp.zeros((W, 2048, 8192), jnp.float32),
+    }
+    ra = byz.make_aggregator(W)
+    shapes = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+    out_sh = param_shardings(shapes, mesh, fsdp=True)
+    n_pad = packer_for(tree).n_pad
+
+    def sync(t, k, osh=None):
+        out, _ = robust_gradient_sync(t, ra, key=k, mesh=mesh, engine="packed",
+                                      use_kernels=False, out_shardings=osh)
+        return out
+
+    with mesh:
+        rep_hlo = jax.jit(sync).lower(tree, k0).compile().as_text()
+        par_hlo = jax.jit(lambda t, k: sync(t, k, out_sh)).lower(
+            tree, k0).compile().as_text()
+    rep_b, par_b = collective_bytes(rep_hlo), collective_bytes(par_hlo)
+    print(f"\negress comparison ({W} workers, n_pad={n_pad}):")
+    print(f"  replicated   : {sum(rep_b.values())/1e9:.3f} GB  {rep_b}"
+          f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in rep_hlo})")
+    print(f"  param-sharded: {sum(par_b.values())/1e9:.3f} GB  {par_b}"
+          f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in par_hlo})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+#!/usr/bin/env python
+"""Thin wrapper over ``python -m repro.analysis`` for people (and CI) who
+prefer a script path. Forwards every argument."""
+
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,26 @@
+"""Three-layer static-analysis gate (HLO lint / jaxpr lint / AST lint).
+
+The paper's bucketing guarantee only holds if the implementation actually
+runs the prescribed aggregation — and the failure mode is silent (PR 7:
+``pallas_call`` quietly falling back to jnp on real meshes; a replicated
+``[n_pad]`` egress inflating ICI traffic ~14x with every test green). This
+package turns those hand-verified compiled-program invariants into an
+executable regression gate:
+
+  repro.analysis.hlo_lint    rules + collective count/byte budgets over
+                             ``compiled.as_text()``
+  repro.analysis.jaxpr_lint  rules over the closed jaxpr of the hot paths
+  repro.analysis.ast_lint    Python AST rules over ``src/``
+  repro.analysis.targets     the compiled programs the gate inspects
+  repro.analysis.cli         ``python -m repro.analysis`` driver
+
+Run ``python -m repro.analysis`` (or ``scripts/lint_repro.py``); see
+``docs/static_analysis.md`` for every rule and the budget-file format.
+
+This module imports neither jax nor the target code — the CLI must be able
+to force the host device topology before jax's backend initializes.
+"""
+
+from repro.analysis.findings import ERROR, WARNING, Finding, Report
+
+__all__ = ["ERROR", "WARNING", "Finding", "Report"]

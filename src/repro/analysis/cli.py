@@ -1,0 +1,133 @@
+"""``python -m repro.analysis`` — run all three static-analysis layers.
+
+Layers (select with ``--layers``):
+  ast    repo-wide Python AST rules over ``src/`` (no jax needed)
+  jaxpr  rules over the closed jaxpr of each analysis target
+  hlo    rules + collective budgets over each target's compiled HLO
+
+The compiled layers run on a forced 8-device host platform (the same
+topology as ``tests/test_shard_engine.py`` and the CI quick job): ``main``
+prepends ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``
+*inside the function, before jax's backend initializes* — an explicit
+activation, not an import side effect (ast-import-env-mutation).
+
+Exit status is nonzero iff any error-severity finding fired. ``--json``
+writes the machine-readable report; ``--update-budgets`` regenerates the
+committed per-target collective budgets from the current tree instead of
+checking them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.findings import Report
+
+DEFAULT_SRC = ("src",)
+ALL_LAYERS = ("ast", "jaxpr", "hlo")
+
+
+def _force_host_devices(n: int) -> None:
+    """Force ``n`` host devices if jax has not locked its backend yet."""
+    if "jax" in sys.modules:
+        import jax
+
+        if jax.device_count() >= n:
+            return  # caller already provides the topology
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n} " + flags)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="three-layer static analysis gate (HLO / jaxpr / AST)")
+    ap.add_argument("--layers", type=str, default="all",
+                    help="comma list of ast,jaxpr,hlo (default: all)")
+    ap.add_argument("--targets", type=str, default=None,
+                    help="comma list of analysis targets (default: all)")
+    ap.add_argument("--src", type=str, nargs="*", default=None,
+                    help="paths for the AST layer (default: src)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="regenerate committed collective budgets from the "
+                         "current tree instead of checking them")
+    ap.add_argument("--budget-dir", type=str, default=None,
+                    help="override the budget directory (tests)")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override every budget file's tolerance")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="forced host device count (default: what the "
+                         "targets need)")
+    args = ap.parse_args(argv)
+
+    layers = (list(ALL_LAYERS) if args.layers == "all"
+              else [l.strip() for l in args.layers.split(",") if l.strip()])
+    unknown = [l for l in layers if l not in ALL_LAYERS]
+    if unknown:
+        ap.error(f"unknown layer(s) {unknown}; have {list(ALL_LAYERS)}")
+
+    report = Report(meta={"layers": layers})
+
+    # ---- AST layer: pure stdlib, runs first (and without jax)
+    if "ast" in layers:
+        from repro.analysis.ast_lint import lint_paths
+
+        src = args.src if args.src is not None else list(DEFAULT_SRC)
+        report.meta["ast_paths"] = src
+        report.extend(lint_paths(src))
+
+    # ---- compiled layers: force the host topology, then import jax
+    if "jaxpr" in layers or "hlo" in layers:
+        from repro.analysis import targets as targets_mod
+
+        _force_host_devices(args.devices or targets_mod.N_DEVICES)
+        import jax
+
+        from repro.analysis.hlo_lint import (lint_hlo, make_budget,
+                                             write_budget)
+        from repro.analysis.jaxpr_lint import lint_jaxpr
+
+        backend = jax.default_backend()
+        report.meta.update(jax_version=jax.__version__, backend=backend,
+                           n_devices=jax.device_count())
+        names = (args.targets.split(",") if args.targets else None)
+        built = targets_mod.build_targets(names)
+        report.meta["targets"] = [t.name for t in built]
+        for target in built:
+            if "jaxpr" in layers:
+                report.extend(lint_jaxpr(target.jaxpr, target.name,
+                                         expect_pallas=target.expect_pallas))
+            if "hlo" in layers:
+                if args.update_budgets:
+                    budget = make_budget(
+                        target.hlo_text, target.name,
+                        tolerance=(args.tolerance
+                                   if args.tolerance is not None
+                                   else None) or 0.25,
+                        meta={"jax_version": jax.__version__,
+                              "backend": backend,
+                              "n_devices": jax.device_count(),
+                              "description": target.description})
+                    path = write_budget(budget, args.budget_dir)
+                    print(f"wrote {path}")
+                    target.spec.check_budget = False  # fresh by definition
+                if args.tolerance is not None:
+                    target.spec.tolerance = args.tolerance
+                report.extend(lint_hlo(target.hlo_text, target.spec,
+                                       backend=backend,
+                                       budget_dir=args.budget_dir))
+
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            fh.write(report.to_json())
+            fh.write("\n")
+    print(report.summary())
+    return 0 if report.ok else 1

@@ -1,0 +1,248 @@
+"""HLO lint: a rule engine over ``compiled.as_text()``.
+
+Grown out of ``repro.launch.hlo_analysis`` (which keeps the import-safe
+parsers): this module turns PR 7's hand-verified compiled-program invariants
+into executable checks. Rules:
+
+  hlo-collective-count-budget / hlo-collective-bytes-budget
+      Per-target collective op counts and payload bytes vs a committed
+      budget file (``analysis/budgets/<target>.json``), checked with a
+      relative tolerance. A regression in the collective schedule (an extra
+      all-gather per leaf, a replicated egress, a 14x ingress blowup) is a
+      correctness bug for the paper's bucketing guarantee, not just a perf
+      bug — it fails loudly here. A *new* collective kind absent from the
+      budget fails too. Large undershoot is a warning (stale budget —
+      regenerate with ``--update-budgets``).
+
+  hlo-replicated-egress
+      A forbidden replicated buffer shape (e.g. ``f32[n_pad]`` of the
+      packed engine) appears in an FSDP-egress program — the exact
+      regression the param-sharded unpack of PR 7 eliminated.
+
+  hlo-f64
+      Any op computes in f64 (weak-type promotion leaks double precision
+      into the train step).
+
+  hlo-host-transfer
+      infeed / outfeed / send / recv, or a custom-call into a host Python
+      callback, inside the step — host round-trips in the hot path.
+
+  hlo-pallas-missing
+      ``use_kernels=True`` but no Pallas kernel custom-call in the compiled
+      program. Only meaningful on TPU/GPU backends (CPU interpret-mode
+      Pallas lowers to plain HLO); the jaxpr layer
+      (``jaxpr-pallas-missing``) covers every backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.findings import ERROR, WARNING, Finding
+from repro.launch.hlo_analysis import collective_bytes, collective_counts
+
+BUDGET_DIR = os.path.join(os.path.dirname(__file__), "budgets")
+DEFAULT_TOLERANCE = 0.25
+# collectives smaller than this never trip a byte budget (compiler noise)
+_BYTES_SLACK = 4096
+
+_HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "send-done", "recv",
+                      "recv-done")
+_CALLBACK_TARGET_RE = re.compile(
+    r'custom_call_target="[^"]*(callback|host)[^"]*"', re.IGNORECASE)
+_PALLAS_TARGET_RE = re.compile(
+    r'custom_call_target="[^"]*(tpu_custom_call|mosaic|triton)[^"]*"',
+    re.IGNORECASE)
+_OP_LINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*")
+
+
+@dataclasses.dataclass
+class HloCheckSpec:
+    """What to enforce for one compiled program."""
+
+    name: str                               # target / budget-file stem
+    forbid_replicated: Tuple[str, ...] = ()  # e.g. ("f32[49152]",)
+    expect_pallas_custom_call: bool = False  # enforce only on tpu/gpu
+    check_budget: bool = True
+    tolerance: Optional[float] = None        # overrides the budget file's
+
+
+# ------------------------------------------------------------------ budgets
+def budget_path(name: str, budget_dir: Optional[str] = None) -> str:
+    return os.path.join(budget_dir or BUDGET_DIR, f"{name}.json")
+
+
+def load_budget(name: str, budget_dir: Optional[str] = None) -> Optional[Dict]:
+    path = budget_path(name, budget_dir)
+    if not os.path.exists(path):
+        return None
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def make_budget(hlo_text: str, name: str,
+                tolerance: float = DEFAULT_TOLERANCE,
+                meta: Optional[Dict] = None) -> Dict:
+    """Measure a compiled program into a committable budget dict."""
+    budget = {
+        "target": name,
+        "tolerance": tolerance,
+        "collective_counts": collective_counts(hlo_text),
+        "collective_bytes": collective_bytes(hlo_text),
+    }
+    if meta:
+        budget.update(meta)
+    return budget
+
+
+def write_budget(budget: Dict, budget_dir: Optional[str] = None) -> str:
+    path = budget_path(budget["target"], budget_dir)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(budget, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def _check_budget(hlo_text: str, spec: HloCheckSpec,
+                  budget: Optional[Dict]) -> List[Finding]:
+    if budget is None:
+        return [Finding(
+            rule="hlo-budget-missing", severity=ERROR, target=spec.name,
+            location=budget_path(spec.name),
+            message=("no committed collective budget for this target — "
+                     "run `python -m repro.analysis --update-budgets` and "
+                     "commit the generated file"))]
+    findings: List[Finding] = []
+    tol = spec.tolerance if spec.tolerance is not None else float(
+        budget.get("tolerance", DEFAULT_TOLERANCE))
+    counts = collective_counts(hlo_text)
+    nbytes = collective_bytes(hlo_text)
+    b_counts: Dict[str, int] = budget.get("collective_counts", {})
+    b_bytes: Dict[str, int] = budget.get("collective_bytes", {})
+
+    for kind, n in sorted(counts.items()):
+        allowed = b_counts.get(kind)
+        if allowed is None:
+            findings.append(Finding(
+                rule="hlo-collective-count-budget", severity=ERROR,
+                target=spec.name, location=f"op kind {kind}",
+                message=(f"{n} {kind} op(s) but the budget has none of this "
+                         f"kind — a new collective appeared in the "
+                         f"schedule")))
+        elif n > allowed * (1.0 + tol) + 1:
+            findings.append(Finding(
+                rule="hlo-collective-count-budget", severity=ERROR,
+                target=spec.name, location=f"op kind {kind}",
+                message=(f"{n} {kind} ops vs budget {allowed} "
+                         f"(+{(n / allowed - 1) * 100:.0f}%, tolerance "
+                         f"{tol * 100:.0f}%)")))
+    for kind, b in sorted(nbytes.items()):
+        allowed = b_bytes.get(kind, 0)
+        if b > allowed * (1.0 + tol) + _BYTES_SLACK:
+            over = (f"+{(b / allowed - 1) * 100:.0f}%" if allowed
+                    else "new kind")
+            findings.append(Finding(
+                rule="hlo-collective-bytes-budget", severity=ERROR,
+                target=spec.name, location=f"op kind {kind}",
+                message=(f"{b} collective bytes of {kind} vs budget "
+                         f"{allowed} ({over}, tolerance {tol * 100:.0f}%)")))
+    total, b_total = sum(nbytes.values()), sum(b_bytes.values())
+    if total > b_total * (1.0 + tol) + _BYTES_SLACK:
+        over = (f"+{(total / b_total - 1) * 100:.0f}%" if b_total
+                else "empty budget")
+        findings.append(Finding(
+            rule="hlo-collective-bytes-budget", severity=ERROR,
+            target=spec.name, location="total",
+            message=(f"{total} total collective bytes vs budget {b_total} "
+                     f"({over}, tolerance {tol * 100:.0f}%)")))
+    elif b_total and total < b_total * (1.0 - tol) - _BYTES_SLACK:
+        findings.append(Finding(
+            rule="hlo-collective-bytes-budget", severity=WARNING,
+            target=spec.name, location="total",
+            message=(f"{total} total collective bytes is "
+                     f"{(1 - total / b_total) * 100:.0f}% UNDER budget "
+                     f"{b_total} — schedule improved; refresh with "
+                     f"--update-budgets")))
+    return findings
+
+
+# -------------------------------------------------------------------- rules
+def _check_f64(hlo_text: str, spec: HloCheckSpec) -> List[Finding]:
+    findings = []
+    for line_no, line in enumerate(hlo_text.splitlines(), start=1):
+        if not _OP_LINE_RE.match(line):
+            continue
+        shape_part = line.split("=", 1)[1].split("(", 1)[0]
+        if re.search(r"\bf64\[", shape_part):
+            findings.append(Finding(
+                rule="hlo-f64", severity=ERROR, target=spec.name,
+                location=f"line {line_no}",
+                message=(f"f64 op in the compiled program (weak-type "
+                         f"promotion?): {line.strip()[:120]}")))
+    return findings
+
+
+def _check_host_transfer(hlo_text: str, spec: HloCheckSpec) -> List[Finding]:
+    findings = []
+    for line_no, line in enumerate(hlo_text.splitlines(), start=1):
+        if not _OP_LINE_RE.match(line):
+            continue
+        m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*?\)|\S+)"
+                     r"\s+([a-z0-9\-]+)\(", line)
+        opname = m.group(1) if m else ""
+        is_host = opname in _HOST_TRANSFER_OPS or (
+            opname == "custom-call" and _CALLBACK_TARGET_RE.search(line))
+        if is_host:
+            findings.append(Finding(
+                rule="hlo-host-transfer", severity=ERROR, target=spec.name,
+                location=f"line {line_no}",
+                message=(f"host transfer in the step hot path: "
+                         f"{line.strip()[:120]}")))
+    return findings
+
+
+def _check_replicated(hlo_text: str, spec: HloCheckSpec) -> List[Finding]:
+    findings = []
+    for shape in spec.forbid_replicated:
+        for line_no, line in enumerate(hlo_text.splitlines(), start=1):
+            if _OP_LINE_RE.match(line) and shape in line:
+                findings.append(Finding(
+                    rule="hlo-replicated-egress", severity=ERROR,
+                    target=spec.name, location=f"line {line_no}",
+                    message=(f"forbidden replicated buffer {shape} "
+                             f"materialized (param-sharded egress "
+                             f"regression): {line.strip()[:120]}")))
+                break  # one finding per forbidden shape is enough
+    return findings
+
+
+def _check_pallas(hlo_text: str, spec: HloCheckSpec,
+                  backend: str) -> List[Finding]:
+    if not spec.expect_pallas_custom_call or backend not in ("tpu", "gpu",
+                                                             "cuda", "rocm"):
+        return []
+    if _PALLAS_TARGET_RE.search(hlo_text):
+        return []
+    return [Finding(
+        rule="hlo-pallas-missing", severity=ERROR, target=spec.name,
+        location="whole program",
+        message=("use_kernels=True but no Pallas kernel custom-call in the "
+                 "compiled program — silent jnp fallback"))]
+
+
+def lint_hlo(hlo_text: str, spec: HloCheckSpec, backend: str = "cpu",
+             budget_dir: Optional[str] = None) -> List[Finding]:
+    """Run every HLO rule for one compiled program."""
+    findings = (_check_f64(hlo_text, spec)
+                + _check_host_transfer(hlo_text, spec)
+                + _check_replicated(hlo_text, spec)
+                + _check_pallas(hlo_text, spec, backend))
+    if spec.check_budget:
+        findings += _check_budget(hlo_text, spec,
+                                  load_budget(spec.name, budget_dir))
+    return findings

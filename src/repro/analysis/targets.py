@@ -1,0 +1,181 @@
+"""Analysis targets: the compiled programs the static gate inspects.
+
+Each target lowers + compiles one hot-path function on the forced 8-device
+host mesh (the same topology as ``tests/test_shard_engine.py`` and the CI
+quick job) and hands the rule layers its HLO text, its closed jaxpr, and
+per-target expectations (collective budget name, forbidden replicated
+shapes, whether the Pallas kernel route must be present).
+
+This module imports jax at call time only — ``repro.analysis.cli`` must be
+able to force the host device count before the backend initializes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+from repro.analysis.hlo_lint import HloCheckSpec
+
+MESH_DATA, MESH_MODEL = 4, 2
+N_DEVICES = MESH_DATA * MESH_MODEL
+SYNC_W = 8            # worker rows in the standalone sync targets
+BLOCK_D = 256
+TRAIN_ARCH = "qwen2.5-14b"  # fsdp + server-momentum family (smoke-sized)
+TRAIN_TARGET = "train_step_qwen2_5_14b_smoke"
+
+
+@dataclasses.dataclass
+class AnalysisTarget:
+    name: str
+    hlo_text: str
+    jaxpr: Any                      # ClosedJaxpr
+    spec: HloCheckSpec
+    expect_pallas: bool = False     # jaxpr layer: require pallas_call eqns
+    description: str = ""
+
+
+def _sync_tree(W: int):
+    """Synthetic FSDP-shardable gradient tree (every leaf divisible by both
+    mesh axes — the shape class the param-sharded egress exists for)."""
+    import jax
+    import jax.numpy as jnp
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    return {
+        "w": jax.random.normal(ks[0], (W, 16, 48), jnp.float32),
+        "b": jax.random.normal(ks[1], (W, 8, 64), jnp.float32),
+        "v": jax.random.normal(ks[2], (W, 4, 256), jnp.float32),
+    }
+
+
+def _make_mesh():
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+
+    if jax.device_count() < N_DEVICES:
+        raise RuntimeError(
+            f"analysis targets need {N_DEVICES} devices, have "
+            f"{jax.device_count()} — run via `python -m repro.analysis` "
+            f"(which forces the host platform) or set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={N_DEVICES}")
+    return make_host_mesh(data=MESH_DATA, model=MESH_MODEL)
+
+
+def _trace(fn, *args, mesh=None):
+    """(closed jaxpr, compiled HLO text) of ``fn`` on the given args."""
+    import jax
+
+    with mesh:
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return jaxpr, hlo
+
+
+def _build_sync_target(name: str, aggregator: str, mixing: str,
+                       use_kernels: bool, param_sharded: bool,
+                       description: str) -> AnalysisTarget:
+    import jax
+
+    from repro.core.aragg import RobustAggregator
+    from repro.distributed.packing import packer_for
+    from repro.distributed.robust_sync import robust_gradient_sync
+    from repro.distributed.sharding import param_shardings
+
+    mesh = _make_mesh()
+    tree = _sync_tree(SYNC_W)
+    ra = RobustAggregator.from_spec(aggregator, mixing=mixing, s=2)
+    packer = packer_for(tree, block_d=BLOCK_D)
+    out_sh = None
+    if param_sharded:
+        shapes = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+        out_sh = param_shardings(shapes, mesh, fsdp=True)
+
+    def sync(t, k):
+        out, _ = robust_gradient_sync(
+            t, ra, key=k, mesh=mesh, engine="packed", block_d=BLOCK_D,
+            use_kernels=use_kernels, out_shardings=out_sh)
+        return out
+
+    jaxpr, hlo = _trace(sync, tree, jax.random.PRNGKey(5), mesh=mesh)
+    spec = HloCheckSpec(
+        name=name,
+        forbid_replicated=(f"f32[{packer.n_pad}]",) if param_sharded else (),
+        expect_pallas_custom_call=use_kernels,
+    )
+    return AnalysisTarget(name=name, hlo_text=hlo, jaxpr=jaxpr, spec=spec,
+                          expect_pallas=use_kernels, description=description)
+
+
+def _build_train_target(name: str, arch: str,
+                        description: str) -> AnalysisTarget:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.configs.base import ByzConfig, InputShape
+    from repro.distributed.steps import (batch_shardings, input_specs,
+                                         make_train_step)
+
+    mesh = _make_mesh()
+    cfg = smoke_config(arch)
+    byz = ByzConfig(aggregator="rfa", mixing="bucketing", s=2,
+                    worker_momentum=0.9, delta=0.1)
+    shape = InputShape("analysis_train", seq_len=128,
+                       global_batch=2 * MESH_DATA, kind="train")
+    specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, mesh)
+    with mesh:
+        step_fn, sh = make_train_step(cfg, byz, mesh)
+        args = (sh["params_shape"], sh["opt_shape"], sh["wm_shape"],
+                jax.ShapeDtypeStruct((2,), jnp.uint32), specs)
+        jaxpr = jax.make_jaxpr(step_fn)(*args)
+        rep = sh["replicated"]
+        hlo = jax.jit(
+            step_fn,
+            in_shardings=(sh["params"], sh["opt_state"], sh["worker_m"],
+                          rep, b_sh),
+            out_shardings=(sh["params"], sh["opt_state"], sh["worker_m"],
+                           rep),
+        ).lower(*args).compile().as_text()
+    spec = HloCheckSpec(name=name)
+    return AnalysisTarget(name=name, hlo_text=hlo, jaxpr=jaxpr, spec=spec,
+                          expect_pallas=True, description=description)
+
+
+_BUILDERS = {
+    "sync_fsdp_rfa_bucketing": lambda: _build_sync_target(
+        "sync_fsdp_rfa_bucketing", "rfa", "bucketing",
+        use_kernels=False, param_sharded=True,
+        description=("packed sync, GSPMD jnp route, param-sharded egress — "
+                     "the no-replicated-[n_pad] invariant + FSDP collective "
+                     "budget")),
+    "sync_kernels_rfa_bucketing": lambda: _build_sync_target(
+        "sync_kernels_rfa_bucketing", "rfa", "bucketing",
+        use_kernels=True, param_sharded=False,
+        description=("packed sync, shard_map Pallas route (Gram-space RFA) "
+                     "— kernel-presence + collective budget")),
+    "sync_kernels_cm_bucketing": lambda: _build_sync_target(
+        "sync_kernels_cm_bucketing", "cm", "bucketing",
+        use_kernels=True, param_sharded=False,
+        description=("packed sync, coordinatewise median kernel route — "
+                     "kernel-presence + collective budget")),
+    TRAIN_TARGET: lambda: _build_train_target(
+        TRAIN_TARGET, TRAIN_ARCH,
+        description=("full train step, smoke-sized FSDP arch with server "
+                     "momentum — f64 / host-transfer / callback / budget "
+                     "gate on the end-to-end compiled program")),
+}
+
+TARGET_NAMES: Tuple[str, ...] = tuple(_BUILDERS)
+
+
+def build_targets(names: Optional[List[str]] = None) -> List[AnalysisTarget]:
+    names = list(names) if names else list(TARGET_NAMES)
+    unknown = [n for n in names if n not in _BUILDERS]
+    if unknown:
+        raise KeyError(f"unknown analysis target(s) {unknown}; "
+                       f"have {sorted(_BUILDERS)}")
+    return [_BUILDERS[n]() for n in names]

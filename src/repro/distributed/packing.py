@@ -46,6 +46,14 @@ because ``pallas_call`` is opaque to GSPMD and would otherwise not
 partition. ``use_kernels=False`` selects the plain ``jnp`` contractions
 that GSPMD partitions across the column sharding (the numerics reference
 for the shard_map path, tests/test_shard_engine.py).
+
+The schedule invariants above are machine-checked: ``repro.analysis``
+compiles packed-sync programs on the 8-device host mesh and fails CI if
+the kernel route silently falls back to jnp (``jaxpr-pallas-missing``),
+the replicated ``f32[n_pad]`` row reappears in a param-sharded-egress
+program (``hlo-replicated-egress``), or the collective count/byte
+schedule drifts past the committed budgets in ``analysis/budgets/``
+(docs/static_analysis.md).
 """
 
 from __future__ import annotations

@@ -51,7 +51,11 @@ engines bit-identical (asserted in tests/test_packing.py); with the default
 
 Semantics are equal to ``RobustAggregator(...)`` on the stacked vector
 (verified in tests/test_robust_sync.py) — sharding constraints never change
-values.
+values. The collective schedule itself (one ingress + one egress, kernel
+route taken, no replicated egress row) is regression-gated by
+``python -m repro.analysis``, which compiles this sync on the 8-device
+host mesh and checks it against committed per-target collective budgets
+(docs/static_analysis.md).
 """
 
 from __future__ import annotations

@@ -1,9 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
-)
-
 """Multi-pod dry-run driver (deliverable e).
 
 For every (architecture x input shape x mesh) combination:
@@ -18,12 +12,18 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
 
-The 512 placeholder CPU devices exist ONLY here (set before any jax import,
-as jax locks the device count on first init). Smoke tests / benchmarks see
-the real single device.
+The 512 placeholder CPU devices exist ONLY inside ``main()``: ``activate()``
+prepends ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS`` and
+MUST run before jax initializes its backend (jax locks the device count on
+first init; importing jax does not initialize it). This used to happen at
+module import time, which silently hijacked the device topology of ANY
+importer — the bug class the ``ast-import-env-mutation`` rule of
+``repro.analysis`` now rejects repo-wide. Importing this module has no side
+effects; smoke tests / benchmarks see the real single device.
 """
 
 import argparse
+import os
 import json
 import sys
 import time
@@ -237,7 +237,18 @@ def dryrun_one(
     return result
 
 
+def activate(n_devices: int = 512) -> None:
+    """Force ``n_devices`` placeholder host devices. Must run before jax's
+    backend initializes (first device query) — an explicit opt-in, NOT an
+    import side effect."""
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+
 def main():
+    activate()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default=None)
     ap.add_argument("--shape", type=str, default=None, choices=list(INPUT_SHAPES))

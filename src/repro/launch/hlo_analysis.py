@@ -1,35 +1,58 @@
 """Import-safe HLO text analysis helpers.
 
-These used to live in ``repro.launch.dryrun``, but that module mutates
+These used to live in ``repro.launch.dryrun``, but that module mutated
 ``XLA_FLAGS`` (forcing 512 host devices) at import time, so tests and
 benchmarks could not reuse its parsers without hijacking their own device
 topology. This module has NO import side effects: it only parses compiled
 HLO text (``compiled.as_text()``).
 
-  collective_bytes(hlo)  — per-op-kind byte totals of every collective
-  _parse_shape_bytes(s)  — bytes of an HLO shape string like 'bf16[4,128]'
+  iter_collectives(hlo)    — (kind, bytes, line_no) for every collective,
+                             async start/done pairs counted exactly once
+  collective_bytes(hlo)    — per-op-kind byte totals of every collective
+  collective_counts(hlo)   — per-op-kind op counts (pairs counted once)
+  _parse_shape_bytes(s)    — bytes of an HLO shape string like 'bf16[4,128]'
+
+The static-analysis rule engine (``repro.analysis.hlo_lint``) builds its
+collective count/byte budget checks on top of these parsers.
 """
 
 from __future__ import annotations
 
 import re
-from typing import Dict
+from typing import Dict, Iterator, Tuple
 
 _DTYPE_BYTES = {
     "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
     "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8, "u64": 8,
+    # fp8 variants (all 1 byte)
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1,
 }
 
 COLLECTIVE_OPS = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
     "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "all-gather-done", "all-reduce-done",
+    "collective-permute-done",
+)
+
+# async pairs: the '-start' op's (tuple) shape holds both operand and result
+# buffers, so counting it would roughly double the payload; the '-done' op's
+# output shape IS the transferred result. We count each pair ONCE, at the
+# '-done', and fall back to the '-start' only if its done never appears.
+_ASYNC_SUFFIXES = ("-start", "-done")
+
+# '%name = shape op(...operands...)' — group(1)=defined var, group(2)=shape
+# (possibly a tuple '(...)'), group(3)=op name, group(4)=operand list.
+_OP_RE = re.compile(
+    r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[^\s]+)\s+([a-z0-9\-]+)\((.*)"
 )
 
 
 def _parse_shape_bytes(shape_str: str) -> int:
     """Total bytes of an HLO shape string like 'bf16[4,128]{1,0}' or a tuple."""
     total = 0
-    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+    for m in re.finditer(r"([a-z]\w*)\[([\d,]*)\]", shape_str):
         dt, dims = m.group(1), m.group(2)
         nbytes = _DTYPE_BYTES.get(dt)
         if nbytes is None:
@@ -43,19 +66,54 @@ def _parse_shape_bytes(shape_str: str) -> int:
     return total
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum output-shape bytes of every collective op in the HLO text."""
-    out: Dict[str, int] = {}
-    for line in hlo_text.splitlines():
-        stripped = line.strip()
-        m = re.match(
-            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^\s]+)\s+([a-z\-]+)\(",
-            stripped,
-        )
+def _base_kind(opname: str) -> str:
+    for suf in _ASYNC_SUFFIXES:
+        if opname.endswith(suf):
+            return opname[: -len(suf)]
+    return opname
+
+
+def iter_collectives(hlo_text: str) -> Iterator[Tuple[str, int, int]]:
+    """Yield ``(kind, payload_bytes, line_no)`` for every collective op.
+
+    Async ``-start``/``-done`` pairs are yielded exactly once (at the
+    ``-done``, whose output shape is the transferred payload); an unpaired
+    ``-start`` (no matching done in the text) is yielded with its own shape.
+    """
+    # pass 1: collect op records and remember which start vars have a done.
+    records = []  # (var, opname, shape_bytes, operands, line_no)
+    done_operands = set()
+    for line_no, line in enumerate(hlo_text.splitlines(), start=1):
+        m = _OP_RE.match(line.strip())
         if not m:
             continue
-        shape_str, opname = m.group(1), m.group(2)
-        if opname in COLLECTIVE_OPS:
-            key = opname.replace("-start", "")
-            out[key] = out.get(key, 0) + _parse_shape_bytes(shape_str)
+        var, shape_str, opname, rest = m.groups()
+        if opname not in COLLECTIVE_OPS:
+            continue
+        operands = tuple(re.findall(r"%?([\w.\-]+)", rest.split(")", 1)[0]))
+        records.append((var, opname, _parse_shape_bytes(shape_str), operands,
+                       line_no))
+        if opname.endswith("-done"):
+            done_operands.update(operands)
+    # pass 2: yield, skipping starts whose done was seen.
+    for var, opname, nbytes, operands, line_no in records:
+        if opname.endswith("-start") and var in done_operands:
+            continue
+        yield _base_kind(opname), nbytes, line_no
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum payload bytes of every collective op in the HLO text, keyed by
+    base op kind (start/done pairs counted exactly once)."""
+    out: Dict[str, int] = {}
+    for kind, nbytes, _ in iter_collectives(hlo_text):
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Count collective ops per base kind (start/done pairs counted once)."""
+    out: Dict[str, int] = {}
+    for kind, _, _ in iter_collectives(hlo_text):
+        out[kind] = out.get(kind, 0) + 1
     return out

@@ -86,7 +86,7 @@ class ByzantineSim:
     # --------------------------------------------------------------- step
     @partial(jax.jit, static_argnums=0)
     def step(self, state: SimState, data_x, data_y, key) -> Tuple[SimState, Dict]:
-        k_batch, k_agg = jax.random.split(key)
+        k_batch, k_attack, k_agg = jax.random.split(key, 3)
         bx, by = sample_worker_batches(k_batch, data_x, data_y, self.batch_size)
 
         # per-worker gradients (vmap over the worker axis)
@@ -101,8 +101,11 @@ class ByzantineSim:
             m_upd = beta * state.momentum + g_flat
         m = jnp.where(state.step == 0, g_flat, m_upd)
 
-        # message-level attack on the stacked momenta
-        sent, attack_state = self.attack(m, self.byz_mask, state.attack_state, key=k_agg)
+        # message-level attack on the stacked momenta. k_attack is dedicated:
+        # sharing the aggregator's key would correlate attacker randomness
+        # with the defense's resampling permutation (ast-prng-reuse).
+        sent, attack_state = self.attack(m, self.byz_mask, state.attack_state,
+                                         key=k_attack)
 
         # mixing + robust aggregation
         agg = self.aggregator(sent, key=k_agg)

@@ -1,0 +1,431 @@
+"""Tests for the three-layer static-analysis gate (``repro.analysis``).
+
+Golden-HLO fixtures live in ``tests/golden_hlo/``; they pin the HLO text
+parsers (shape bytes, start/done collective pairing) and the HLO rule
+engine against hand-computed expectations, so a parser regression cannot
+silently loosen the CI gate.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.ast_lint import lint_paths, lint_source
+from repro.analysis.findings import ERROR, WARNING, Finding, Report
+from repro.analysis.hlo_lint import (HloCheckSpec, lint_hlo, make_budget,
+                                     write_budget)
+from repro.launch.hlo_analysis import (_parse_shape_bytes, collective_bytes,
+                                       collective_counts, iter_collectives)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = os.path.join(HERE, "golden_hlo")
+REPO = os.path.dirname(HERE)
+
+
+def _golden(name):
+    with open(os.path.join(GOLDEN, name), "r", encoding="utf-8") as fh:
+        return fh.read()
+
+
+# ===================================================== HLO text parsers
+class TestParseShapeBytes:
+    def test_simple(self):
+        assert _parse_shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+        assert _parse_shape_bytes("bf16[4,128]") == 4 * 128 * 2
+
+    def test_scalar_and_empty_dims(self):
+        assert _parse_shape_bytes("f32[]") == 4
+        assert _parse_shape_bytes("pred[]") == 1
+
+    def test_tuple_sums_elements(self):
+        assert _parse_shape_bytes("(f32[4]{0}, u32[2]{0})") == 16 + 8
+
+    def test_fp8_dtypes(self):
+        assert _parse_shape_bytes("f8e4m3fn[1024]") == 1024
+        assert _parse_shape_bytes("f8e5m2[2,2]") == 4
+
+    def test_f64(self):
+        assert _parse_shape_bytes("f64[2]") == 16
+
+
+class TestStartDonePairing:
+    """tests/golden_hlo/start_done_pair.hlo: one all-gather-start/-done
+    pair (start carries the (operand, result) tuple ≈ 2x payload), one
+    plain all-reduce, one collective-permute."""
+
+    def test_pair_counted_once_at_done(self):
+        hlo = _golden("start_done_pair.hlo")
+        counts = collective_counts(hlo)
+        assert counts == {"all-gather": 1, "all-reduce": 1,
+                          "collective-permute": 1}
+
+    def test_pair_bytes_use_done_output_shape(self):
+        hlo = _golden("start_done_pair.hlo")
+        nbytes = collective_bytes(hlo)
+        # done output f32[16,128], NOT the start tuple (8+16)*128*4
+        assert nbytes["all-gather"] == 16 * 128 * 4
+        assert nbytes["all-reduce"] == 8 * 128 * 4
+        assert nbytes["collective-permute"] == 8 * 128 * 4
+
+    def test_unpaired_start_still_counted(self):
+        hlo = ("ENTRY %m (p0: f32[8]) -> f32[8] {\n"
+               "  %p0 = f32[8]{0} parameter(0)\n"
+               "  %s = (f32[8]{0}, f32[16]{0}) all-gather-start(%p0)\n"
+               "  ROOT %r = f32[8]{0} copy(%p0)\n"
+               "}\n")
+        counts = collective_counts(hlo)
+        assert counts == {"all-gather": 1}
+        # no done to pair with: the start's tuple shape is all we have
+        assert collective_bytes(hlo)["all-gather"] == (8 + 16) * 4
+
+    def test_iter_collectives_line_numbers(self):
+        hlo = _golden("start_done_pair.hlo")
+        kinds = sorted(kind for kind, _, _ in iter_collectives(hlo))
+        assert kinds == ["all-gather", "all-reduce", "collective-permute"]
+        for _, _, line_no in iter_collectives(hlo):
+            assert line_no >= 1
+
+
+# ========================================================== HLO rules
+class TestHloRules:
+    """tests/golden_hlo/lint_rules.hlo: one f64 convert, one host
+    callback custom-call, one infeed, and f32[2304] buffers."""
+
+    def _rules(self, findings):
+        return sorted({f.rule for f in findings})
+
+    def test_f64_host_transfer_replicated(self):
+        hlo = _golden("lint_rules.hlo")
+        spec = HloCheckSpec(name="golden", forbid_replicated=("f32[2304]",),
+                            check_budget=False)
+        findings = lint_hlo(hlo, spec, backend="cpu")
+        assert self._rules(findings) == ["hlo-f64", "hlo-host-transfer",
+                                         "hlo-replicated-egress"]
+        # both the callback custom-call AND the infeed are host transfers
+        assert sum(f.rule == "hlo-host-transfer" for f in findings) == 2
+        assert all(f.severity == ERROR for f in findings)
+
+    def test_clean_program_passes(self):
+        hlo = _golden("start_done_pair.hlo")
+        spec = HloCheckSpec(name="clean", check_budget=False)
+        assert lint_hlo(hlo, spec, backend="cpu") == []
+
+    def test_pallas_rule_gated_to_accelerator_backends(self):
+        hlo = _golden("start_done_pair.hlo")  # no pallas custom-call
+        spec = HloCheckSpec(name="k", expect_pallas_custom_call=True,
+                            check_budget=False)
+        # CPU interpret-mode Pallas lowers to plain HLO: rule must not fire
+        assert lint_hlo(hlo, spec, backend="cpu") == []
+        tpu = lint_hlo(hlo, spec, backend="tpu")
+        assert self._rules(tpu) == ["hlo-pallas-missing"]
+        with_kernel = hlo + ('  %k = f32[8]{0} custom-call(%p0), '
+                             'custom_call_target="tpu_custom_call"\n')
+        assert lint_hlo(with_kernel, spec, backend="tpu") == []
+
+
+class TestBudgets:
+    def _budget_roundtrip(self, tmp_path, hlo):
+        budget = make_budget(hlo, "t", tolerance=0.25)
+        write_budget(budget, str(tmp_path))
+        return budget
+
+    def test_roundtrip_passes_on_same_program(self, tmp_path):
+        hlo = _golden("start_done_pair.hlo")
+        self._budget_roundtrip(tmp_path, hlo)
+        spec = HloCheckSpec(name="t")
+        assert lint_hlo(hlo, spec, backend="cpu",
+                        budget_dir=str(tmp_path)) == []
+        on_disk = json.loads(
+            (tmp_path / "t.json").read_text(encoding="utf-8"))
+        assert on_disk["collective_counts"] == {"all-gather": 1,
+                                                "all-reduce": 1,
+                                                "collective-permute": 1}
+
+    def test_missing_budget_is_error(self):
+        hlo = _golden("start_done_pair.hlo")
+        findings = lint_hlo(hlo, HloCheckSpec(name="nope"), backend="cpu",
+                            budget_dir="/nonexistent")
+        assert [f.rule for f in findings] == ["hlo-budget-missing"]
+
+    def test_bytes_overshoot_beyond_tolerance(self, tmp_path):
+        hlo = _golden("start_done_pair.hlo")
+        self._budget_roundtrip(tmp_path, hlo)
+        # 4 extra all-reduces: counts x5 and bytes x5 >> 25% tolerance
+        bloated = hlo + 4 * ("  %arX = f32[8,128]{1,0} all-reduce(%p0), "
+                             "to_apply=%add\n")
+        findings = lint_hlo(bloated, HloCheckSpec(name="t"), backend="cpu",
+                            budget_dir=str(tmp_path))
+        rules = {f.rule for f in findings}
+        assert "hlo-collective-count-budget" in rules
+        assert "hlo-collective-bytes-budget" in rules
+        assert all(f.severity == ERROR for f in findings)
+
+    def test_new_collective_kind_is_error(self, tmp_path):
+        hlo = _golden("start_done_pair.hlo")
+        self._budget_roundtrip(tmp_path, hlo)
+        grown = hlo + ("  %a2a = f32[8,128]{1,0} all-to-all(%p0), "
+                       "dimensions={0}\n")
+        findings = lint_hlo(grown, HloCheckSpec(name="t"), backend="cpu",
+                            budget_dir=str(tmp_path))
+        assert any(f.rule == "hlo-collective-count-budget"
+                   and "all-to-all" in f.location for f in findings)
+
+    def test_large_undershoot_is_warning_not_error(self, tmp_path):
+        hlo = _golden("start_done_pair.hlo")
+        self._budget_roundtrip(tmp_path, hlo)
+        # drop the all-gather pair AND the permute: way under budget
+        # (past tolerance + slack) -> stale-budget warning, not an error
+        kept = "\n".join(l for l in hlo.splitlines()
+                         if "all-gather" not in l and "permute" not in l)
+        findings = lint_hlo(kept, HloCheckSpec(name="t"), backend="cpu",
+                            budget_dir=str(tmp_path))
+        assert [f.severity for f in findings] == [WARNING]
+        assert "--update-budgets" in findings[0].message
+
+
+# =========================================================== AST rules
+class TestPrngReuse:
+    def test_reused_sampler_key_flagged(self):
+        src = ("import jax\n"
+               "def f(key):\n"
+               "    a = jax.random.normal(key, (4,))\n"
+               "    b = jax.random.uniform(key, (4,))\n"
+               "    return a + b\n")
+        findings = lint_source(src, "m.py")
+        assert [f.rule for f in findings] == ["ast-prng-reuse"]
+        assert "m.py:4" in findings[0].location
+
+    def test_reuse_via_key_kwarg_flagged(self):
+        # the CrossDeviceSim / ByzantineWorkers bug shape: attack and
+        # aggregator sharing one key via key= kwargs
+        src = ("def step(self, key):\n"
+               "    sent = self.attack(m, key=key)\n"
+               "    agg = self.aggregator(sent, key=key)\n"
+               "    return agg\n")
+        findings = lint_source(src, "m.py")
+        assert [f.rule for f in findings] == ["ast-prng-reuse"]
+
+    def test_split_between_uses_is_clean(self):
+        src = ("import jax\n"
+               "def f(key):\n"
+               "    k1, key = jax.random.split(key)\n"
+               "    a = jax.random.normal(k1, (4,))\n"
+               "    k2, key = jax.random.split(key)\n"
+               "    b = jax.random.normal(k2, (4,))\n"
+               "    return a + b\n")
+        assert lint_source(src, "m.py") == []
+
+    def test_if_else_branches_do_not_cross_contaminate(self):
+        src = ("import jax\n"
+               "def f(key, flag):\n"
+               "    if flag:\n"
+               "        return jax.random.normal(key, (4,))\n"
+               "    else:\n"
+               "        return jax.random.uniform(key, (4,))\n")
+        assert lint_source(src, "m.py") == []
+
+    def test_nested_function_scopes_are_independent(self):
+        # a shadowing parameter named `key` in a nested def must not be
+        # confused with the outer key (the moe.py false-positive shape)
+        src = ("import jax\n"
+               "def outer(key):\n"
+               "    a = jax.random.normal(key, (4,))\n"
+               "    def inner(key):\n"
+               "        return jax.random.normal(key, (4,))\n"
+               "    return a, inner\n")
+        assert lint_source(src, "m.py") == []
+
+    def test_split_indexed_keys_tracked_separately(self):
+        src = ("import jax\n"
+               "def f(key):\n"
+               "    ks = jax.random.split(key, 2)\n"
+               "    a = jax.random.normal(ks[0], (4,))\n"
+               "    b = jax.random.normal(ks[1], (4,))\n"
+               "    c = jax.random.normal(ks[0], (4,))\n"
+               "    return a + b + c\n")
+        findings = lint_source(src, "m.py")
+        assert [f.rule for f in findings] == ["ast-prng-reuse"]
+        assert "m.py:6" in findings[0].location
+
+
+class TestEnvMutation:
+    def test_module_level_environ_assign_flagged(self):
+        src = ('import os\n'
+               'os.environ["XLA_FLAGS"] = "--xla_force_host"\n')
+        findings = lint_source(src, "m.py")
+        assert [f.rule for f in findings] == ["ast-import-env-mutation"]
+
+    def test_jax_config_update_at_import_flagged(self):
+        src = ('import jax\n'
+               'jax.config.update("jax_enable_x64", True)\n')
+        findings = lint_source(src, "m.py")
+        assert [f.rule for f in findings] == ["ast-import-env-mutation"]
+
+    def test_inside_function_is_clean(self):
+        src = ('import os\n'
+               'def activate():\n'
+               '    os.environ["XLA_FLAGS"] = "--xla_force_host"\n')
+        assert lint_source(src, "m.py") == []
+
+    def test_under_main_guard_is_clean(self):
+        src = ('import os\n'
+               'if __name__ == "__main__":\n'
+               '    os.environ["XLA_FLAGS"] = "--xla_force_host"\n')
+        assert lint_source(src, "m.py") == []
+
+    def test_environ_setdefault_flagged(self):
+        src = ('import os\n'
+               'os.environ.setdefault("JAX_PLATFORMS", "cpu")\n')
+        findings = lint_source(src, "m.py")
+        assert [f.rule for f in findings] == ["ast-import-env-mutation"]
+
+
+class TestMutableDefaultAndSuppression:
+    def test_mutable_default_flagged(self):
+        findings = lint_source("def f(x, acc=[]):\n    return acc\n", "m.py")
+        assert [f.rule for f in findings] == ["ast-mutable-default"]
+
+    def test_none_default_clean(self):
+        assert lint_source("def f(x, acc=None):\n    return acc\n",
+                           "m.py") == []
+
+    def test_inline_suppression(self):
+        src = ("def f(x, acc=[]):  # lint: disable=ast-mutable-default\n"
+               "    return acc\n")
+        assert lint_source(src, "m.py") == []
+
+    def test_suppress_all(self):
+        src = ('import os\n'
+               'os.environ["A"] = "b"  # lint: disable=all\n')
+        assert lint_source(src, "m.py") == []
+
+    def test_syntax_error_reported_not_raised(self):
+        findings = lint_source("def f(:\n", "m.py")
+        assert [f.rule for f in findings] == ["ast-syntax-error"]
+
+
+def test_repo_src_tree_is_ast_clean():
+    """The committed src/ tree must pass the AST layer (the same check CI
+    runs): a finding here means a real regression or a missing inline
+    suppression with justification."""
+    findings = lint_paths([os.path.join(REPO, "src")])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# ============================================================ findings
+def test_report_json_and_exit_semantics():
+    r = Report(meta={"layers": ["ast"]})
+    assert r.ok
+    r.extend([Finding(rule="x", severity=WARNING, target="t", location="l",
+                      message="m")])
+    assert r.ok  # warnings do not gate
+    r.extend([Finding(rule="y", severity=ERROR, target="t", location="l",
+                      message="m")])
+    assert not r.ok
+    d = json.loads(r.to_json())
+    assert d["n_errors"] == 1 and d["n_warnings"] == 1 and d["ok"] is False
+    assert "FAIL" in r.summary()
+
+
+# ========================================================= jaxpr rules
+class TestJaxprLint:
+    def test_pallas_call_detected_through_subjaxprs(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis.jaxpr_lint import lint_jaxpr, primitive_counts
+        from repro.kernels.ops import gram
+
+        def f(x):
+            return gram(x, block_d=128)
+
+        x = jnp.ones((4, 256), jnp.float32)
+        jaxpr = jax.make_jaxpr(f)(x)
+        assert primitive_counts(jaxpr).get("pallas_call", 0) >= 1
+        assert lint_jaxpr(jaxpr, "t", expect_pallas=True) == []
+
+    def test_missing_pallas_flagged(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis.jaxpr_lint import lint_jaxpr
+
+        jaxpr = jax.make_jaxpr(lambda x: x @ x.T)(jnp.ones((4, 8)))
+        findings = lint_jaxpr(jaxpr, "t", expect_pallas=True)
+        assert [f.rule for f in findings] == ["jaxpr-pallas-missing"]
+        assert lint_jaxpr(jaxpr, "t", expect_pallas=False) == []
+
+    def test_callback_flagged(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.analysis.jaxpr_lint import lint_jaxpr
+
+        def f(x):
+            return jax.pure_callback(
+                lambda v: np.asarray(v) * 2,
+                jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+        jaxpr = jax.make_jaxpr(f)(jnp.ones((4,)))
+        findings = lint_jaxpr(jaxpr, "t")
+        assert any(f.rule == "jaxpr-callback" for f in findings)
+
+
+# ========================================================== CLI plumbing
+def test_cli_ast_layer_exits_zero_on_repo():
+    """`python -m repro.analysis --layers ast` is the cheap half of the CI
+    gate: it must exit 0 on the committed tree (no jax import needed)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--layers", "ast"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_cli_ast_layer_exits_nonzero_on_violation(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text('import os\nos.environ["X"] = "y"\n', encoding="utf-8")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--layers", "ast",
+         "--src", str(bad), "--json", str(tmp_path / "report.json")],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    report = json.loads((tmp_path / "report.json").read_text())
+    assert report["ok"] is False
+    assert report["findings"][0]["rule"] == "ast-import-env-mutation"
+
+
+def test_dryrun_import_has_no_env_side_effect():
+    """Satellite regression test: importing repro.launch.dryrun must not
+    mutate XLA_FLAGS (the flag moves behind dryrun.activate())."""
+    code = ("import os, sys\n"
+            "before = os.environ.get('XLA_FLAGS')\n"
+            "import repro.launch.dryrun as d\n"
+            "assert os.environ.get('XLA_FLAGS') == before, 'import mutated'\n"
+            "assert callable(d.activate)\n"
+            "print('clean')\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_budget_files_committed_for_all_targets():
+    """Every analysis target must have a committed budget file."""
+    from repro.analysis.hlo_lint import BUDGET_DIR
+    from repro.analysis.targets import TARGET_NAMES
+
+    for name in TARGET_NAMES:
+        path = os.path.join(BUDGET_DIR, f"{name}.json")
+        assert os.path.exists(path), f"missing committed budget {path}"
+        budget = json.loads(open(path, encoding="utf-8").read())
+        assert budget["target"] == name
+        assert budget["collective_counts"], name
