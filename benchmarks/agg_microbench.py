@@ -18,11 +18,14 @@ Two engine sweeps back the packed flat-buffer engine
   compiled in a subprocess so this process keeps the real single device.
 
 ``main()`` writes the machine-readable results to
-``BENCH_agg_microbench.json`` at the repo root.
+``BENCH_agg_microbench.json`` at the repo root. ``--smoke`` instead runs a
+seconds-scale regression gate on the selection-network CM cells against the
+committed BENCH rows (used by the CI ``bench-smoke`` job).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -45,6 +48,24 @@ SYNC_TOTAL_D = 131_072
 SYNC_LEAF_COUNTS = (1, 64, 1024)
 SYNC_W = 16
 SYNC_BLOCK_D = 128
+
+# Wall-times of the order-statistic cells BEFORE the selection-network
+# engine (odd-even transposition sort in the kernel, variadic jnp.sort /
+# jnp.median in the core path), kept for the before/after summary so the
+# speedup survives BENCH refreshes.
+_PRE_SELECTION_BASELINES = {
+    "core/cm+none/W=25": 395200.2,
+    "kernels/cm/W=25": 554676.4,
+}
+
+# --smoke regression gate: fail if today's machine is slower than the
+# committed BENCH row by more than this factor. The smoke sweep runs at a
+# smaller d than the committed rows, which adds headroom on top of this —
+# the gate only trips on algorithmic regressions (e.g. reintroducing the
+# O(W^2) transposition sort), not machine noise.
+SMOKE_CELLS = ("core/cm+none/W=25", "kernels/cm/W=25")
+SMOKE_FACTOR = 2.0
+SMOKE_D = 16_384
 
 
 def _time(fn, *args, iters=20):
@@ -176,6 +197,11 @@ def _write_json(rep):
         )
     except StopIteration:
         pass
+    for cell, before in _PRE_SELECTION_BASELINES.items():
+        try:
+            summary[f"selection_speedup[{cell}]"] = before / val(cell)
+        except StopIteration:
+            pass
     path = Path(__file__).resolve().parents[1] / "BENCH_agg_microbench.json"
     path.write_text(json.dumps(
         {"benchmark": rep.name, "units": "us_per_call", "rows": rep.rows,
@@ -185,21 +211,53 @@ def _write_json(rep):
     print(f"  wrote {path}", flush=True)
 
 
+def smoke_check() -> int:
+    """CI regression gate: re-measure the order-statistic cells at a reduced
+    d and compare against the committed BENCH rows (x SMOKE_FACTOR). Returns
+    a process exit code. O(seconds), no JSON write."""
+    path = Path(__file__).resolve().parents[1] / "BENCH_agg_microbench.json"
+    committed = {r["cell"]: r["value"]
+                 for r in json.loads(path.read_text())["rows"]}
+    key = jax.random.PRNGKey(0)
+    W = 25
+    xs = jax.random.normal(key, (W, SMOKE_D), jnp.float32)
+    ra = RobustAggregator.from_spec("cm", mixing="none", s=2)
+    measured = {
+        "core/cm+none/W=25": _time(jax.jit(lambda x, k: ra(x, key=k)),
+                                   xs, key, iters=5),
+        "kernels/cm/W=25": _time(ops.cm_aggregate, xs, iters=3),
+    }
+    failed = False
+    for cell in SMOKE_CELLS:
+        limit = committed[cell] * SMOKE_FACTOR
+        us = measured[cell]
+        status = "FAIL" if us > limit else "ok"
+        failed |= us > limit
+        print(f"  [{status}] {cell}: {us:.1f} us at d={SMOKE_D} "
+              f"(limit {limit:.1f} us = committed {committed[cell]:.1f} "
+              f"x {SMOKE_FACTOR})", flush=True)
+    return 1 if failed else 0
+
+
 def main(reporter=None):
     rep = reporter or Reporter("agg_microbench")
     key = jax.random.PRNGKey(0)
     for (W, d) in [(25, 100_352), (53, 100_352)]:
         xs = jax.random.normal(key, (W, d), jnp.float32)
-        for agg, mixing in [("krum", "none"), ("cm", "none"), ("rfa", "none"),
-                            ("cclip", "none"), ("rfa", "bucketing")]:
+        for agg, mixing in [("krum", "none"), ("cm", "none"), ("tm", "none"),
+                            ("rfa", "none"), ("cclip", "none"),
+                            ("rfa", "bucketing")]:
             kwargs = {"tau": 10.0} if agg == "cclip" else (
-                {"n_byzantine": W // 10} if agg == "krum" else {})
+                {"n_byzantine": W // 10} if agg == "krum" else (
+                    {"n_trim": W // 10} if agg == "tm" else {}))
             ra = RobustAggregator.from_spec(agg, mixing=mixing, s=2, **kwargs)
             call = jax.jit(lambda x, k, _ra=ra: _ra(x, key=k))
             us = _time(call, xs, key)
             rep.add(f"core/{agg}+{mixing}/W={W}", us)
         # kernel path (interpret mode on CPU — TPU-native on device)
         rep.add(f"kernels/cm/W={W}", _time(ops.cm_aggregate, xs, iters=3))
+        rep.add(f"kernels/tm/W={W}",
+                _time(lambda x: ops.tm_aggregate(x, W // 10), xs, iters=3))
         rep.add(f"kernels/gram/W={W}", _time(ops.gram, xs, iters=3))
     sync_engine_sweep(rep, jax.random.fold_in(key, 1))
     cclip_fusion_sweep(rep, jax.random.fold_in(key, 2))
@@ -209,4 +267,10 @@ def main(reporter=None):
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: compare the CM cells against the "
+                         "committed BENCH rows instead of a full sweep")
+    if ap.parse_args().smoke:
+        sys.exit(smoke_check())
     main()

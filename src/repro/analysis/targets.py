@@ -160,8 +160,14 @@ _BUILDERS = {
     "sync_kernels_cm_bucketing": lambda: _build_sync_target(
         "sync_kernels_cm_bucketing", "cm", "bucketing",
         use_kernels=True, param_sharded=False,
-        description=("packed sync, coordinatewise median kernel route — "
-                     "kernel-presence + collective budget")),
+        description=("packed sync, coordinatewise median selection-network "
+                     "kernel route — kernel-presence + collective budget")),
+    "sync_kernels_cclip_bucketing": lambda: _build_sync_target(
+        "sync_kernels_cclip_bucketing", "cclip", "bucketing",
+        use_kernels=True, param_sharded=False,
+        description=("packed sync, fused multi-device CCLIP route (column-"
+                     "sharded cclip_aggregate instead of Gram-space "
+                     "weights) — kernel-presence + collective budget")),
     TRAIN_TARGET: lambda: _build_train_target(
         TRAIN_TARGET, TRAIN_ARCH,
         description=("full train step, smoke-sized FSDP arch with server "

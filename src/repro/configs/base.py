@@ -70,6 +70,12 @@ class ModelConfig:
     scan_unroll: int = 1  # >1 (or = n_periods) unrolls the layer scan —
     #                       used by the dry-run for exact HLO cost analysis
     fsdp: bool = False    # shard params over the data axis too
+    # per-arch sharding overrides replacing the inferred rule for matching
+    # param paths: ((path_regex, spec_entries), ...) where each spec entry
+    # is a mesh-axis name, a tuple of axis names, or None — decoded to
+    # PartitionSpec by sharding.overrides_from_config. Nested tuples (not a
+    # dict) so the frozen config stays hashable.
+    sharding_overrides: Tuple[Tuple[str, Tuple], ...] = ()
     # momentum bookkeeping mode for Byzantine training (DESIGN.md §5)
     momentum_mode: str = "worker"  # worker (Alg. 2) | server (Remark 7)
 

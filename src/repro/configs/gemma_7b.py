@@ -18,6 +18,12 @@ CONFIG = ModelConfig(
     mlp_kind="geglu",
     tie_embeddings=True,
     fsdp=True,
+    # the tied embed doubles as the LM head: keep d_model on the model axis
+    # (the layout every block activation already has) and FSDP the 256k
+    # vocab rows over data — the inferred rule would pick the reverse
+    # (vocab over model), forcing a d_model all-to-all around every logits
+    # matmul. Exercised + asserted in tests/test_steps.py.
+    sharding_overrides=(("^embed$", ("data", "model")),),
     momentum_mode="server",
     remat="full",
     long_context="window",

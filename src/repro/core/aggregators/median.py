@@ -4,6 +4,13 @@ Both are coordinatewise, hence *exactly* leaf-local: aggregating each pytree
 leaf (or each shard of a leaf) independently gives the same result as on the
 concatenated vector. This makes them trivially compatible with the
 factorized distributed path.
+
+Both run on the pruned Batcher selection network
+(repro/kernels/selection_network.py) instead of ``jnp.sort``: only the
+needed order statistics are materialized, as unrolled vectorized min/max —
+value-equal to the sort (same input multiset -> same order statistics) and
+~40x faster on the CPU backend, where XLA's variadic sort is the single
+slowest op in the whole aggregator zoo (BENCH_agg_microbench.json).
 """
 
 from __future__ import annotations
@@ -11,6 +18,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.aggregators.base import Aggregator
+from repro.kernels.selection_network import median_select, trimmed_mean_select
 
 
 class CoordinateWiseMedian(Aggregator):
@@ -21,7 +29,7 @@ class CoordinateWiseMedian(Aggregator):
         # median over the worker axis; for even n this is the midpoint of the
         # two central order statistics (jnp.median semantics), matching the
         # minimizer set of sum_i |v - x_i|.
-        return jnp.median(xs_leaf.astype(jnp.float32), axis=0).astype(xs_leaf.dtype)
+        return median_select(xs_leaf.astype(jnp.float32)).astype(xs_leaf.dtype)
 
 
 class TrimmedMean(Aggregator):
@@ -36,9 +44,5 @@ class TrimmedMean(Aggregator):
     def combine_leaf(self, xs_leaf: jnp.ndarray) -> jnp.ndarray:
         n = xs_leaf.shape[0]
         b = min(self.n_trim, (n - 1) // 2)
-        s = jnp.sort(xs_leaf.astype(jnp.float32), axis=0)
-        if b == 0:
-            out = jnp.mean(s, axis=0)
-        else:
-            out = jnp.mean(s[b : n - b], axis=0)
+        out = trimmed_mean_select(xs_leaf.astype(jnp.float32), b)
         return out.astype(xs_leaf.dtype)

@@ -43,7 +43,11 @@ multi-device mesh they route through ``shard_map`` wrappers
 (``distributed/shard_kernels.py``) — each device runs the kernel on its
 local column slice, with an explicit psum only for the Gram/norms phases —
 because ``pallas_call`` is opaque to GSPMD and would otherwise not
-partition. ``use_kernels=False`` selects the plain ``jnp`` contractions
+partition. On multi-device meshes RFA and CCLIP additionally skip the
+[W, W] Gram detour and run the FUSED sharded compositions
+(``shard_kernels.rfa_aggregate`` / ``cclip_aggregate``): mix once in
+vector space, then one local fused kernel pass + one [W]-sized psum per
+iteration. ``use_kernels=False`` selects the plain ``jnp`` contractions
 that GSPMD partitions across the column sharding (the numerics reference
 for the shard_map path, tests/test_shard_engine.py).
 
@@ -263,11 +267,37 @@ def packed_robust_sync(
             if aggregator.base.name == "cm":
                 out = (shard_kernels.cm_aggregate(mixed, mesh, block_d=block_d)
                        if sharded else ops.cm_aggregate(mixed, block_d=block_d))
+            elif aggregator.base.name == "tm":
+                b = min(aggregator.base.n_trim, (mixed.shape[0] - 1) // 2)
+                out = (shard_kernels.tm_aggregate(mixed, b, mesh, block_d=block_d)
+                       if sharded else ops.tm_aggregate(mixed, b, block_d=block_d))
             elif sharded:  # any other combine_leaf is column-local too
                 out = shard_kernels.coordinatewise_combine(
                     mixed, mesh, aggregator.base.combine_leaf)
             else:
                 out = aggregator.base.combine_leaf(mixed)
+        return egress(out), info
+
+    if sharded and aggregator.base.name in ("rfa", "cclip"):
+        # fused multi-device route: mix in vector space, then the sharded
+        # Weiszfeld / fused-CCLIP composition — one local kernel pass plus
+        # one [W]-sized psum per iteration instead of the [W, W] Gram
+        # detour. Same math as the Gram route (weights = M^T c applied to
+        # the buffer == c applied to the mixed buffer), fp32-tolerance
+        # equal, asserted in tests/test_shard_engine.py. ACClip stays on
+        # the Gram route (its adaptive tau needs the full norm vector).
+        base = aggregator.base
+        mix_key = None if key is None else jax.random.split(key)[0]
+        m = aggregator.mixer.matrix(mix_key, W)
+        mixed = shard_kernels.mix_apply(m, buf, mesh, block_d=block_d)
+        if base.name == "cclip":
+            out = shard_kernels.cclip_aggregate(
+                mixed, base.tau, mesh, n_iters=base.n_iters, eps=base.eps,
+                block_d=block_d)
+        else:
+            out = shard_kernels.rfa_aggregate(
+                mixed, mesh, n_iters=base.n_iters, eps=base.eps,
+                block_d=block_d)
         return egress(out), info
 
     if not use_kernels:

@@ -172,6 +172,9 @@ def _per_leaf_sync(
             mixed = ops.mix_apply(m, flat, block_d=block_d)
             if aggregator.base.name == "cm":
                 out = ops.cm_aggregate(mixed, block_d=block_d)
+            elif aggregator.base.name == "tm":
+                b = min(aggregator.base.n_trim, (mixed.shape[0] - 1) // 2)
+                out = ops.tm_aggregate(mixed, b, block_d=block_d)
             else:
                 out = aggregator.base.combine_leaf(mixed)
             return out.reshape(leaf.shape[1:]).astype(leaf.dtype)

@@ -12,7 +12,8 @@ reduces over the column axis:
 
   gram / residual_norms / the fused-CCLIP residual output
       column reductions  -> local kernel + ``psum`` over every mesh axis;
-  mix_apply / cwise_median / combine_leaf / the fused-CCLIP center output
+  mix_apply / cwise_median / cwise_trimmed_mean / combine_leaf / the
+      fused-CCLIP center output
       column-local       -> no collective at all; outputs STAY
       column-sharded, which is exactly what the next phase (or the
       param-sharded egress in ``packing.py``) wants.
@@ -94,11 +95,22 @@ def mix_apply(mix: jnp.ndarray, buf: jnp.ndarray, mesh, *,
     return out[:, :n] if n != out.shape[1] else out
 
 
-def cm_aggregate(buf: jnp.ndarray, mesh, *, block_d: int = 1024) -> jnp.ndarray:
-    """Sharded coordinate-wise median: column-local sort network per device;
-    output is the column-sharded ``[n]`` aggregate."""
+def cm_aggregate(buf: jnp.ndarray, mesh, *, block_d: int = 4096) -> jnp.ndarray:
+    """Sharded coordinate-wise median: column-local selection network per
+    device; output is the column-sharded ``[n]`` aggregate."""
     buf, n = _pad_cols(buf, mesh)
     body = lambda b: ops.cm_aggregate(b, block_d=block_d)
+    out = shard_map(body, mesh=mesh, in_specs=(col_spec(mesh),),
+                    out_specs=vec_spec(mesh), check_rep=False)(buf)
+    return out[:n] if n != out.shape[0] else out
+
+
+def tm_aggregate(buf: jnp.ndarray, n_trim: int, mesh, *,
+                 block_d: int = 4096) -> jnp.ndarray:
+    """Sharded coordinate-wise trimmed mean: column-local selection network
+    per device; output is the column-sharded ``[n]`` aggregate."""
+    buf, n = _pad_cols(buf, mesh)
+    body = lambda b: ops.tm_aggregate(b, n_trim, block_d=block_d)
     out = shard_map(body, mesh=mesh, in_specs=(col_spec(mesh),),
                     out_specs=vec_spec(mesh), check_rep=False)(buf)
     return out[:n] if n != out.shape[0] else out

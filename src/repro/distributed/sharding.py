@@ -75,6 +75,18 @@ def infer_param_spec(
     return P(*spec)
 
 
+def overrides_from_config(cfg) -> Dict[str, P]:
+    """Decode ``ModelConfig.sharding_overrides`` — hashable nested tuples
+    ``((path_regex, spec_entries), ...)`` — into the ``{regex:
+    PartitionSpec}`` mapping ``param_shardings`` consumes. Each spec entry
+    is a mesh-axis name, a tuple of axis names, or None."""
+    return {
+        pat: P(*(tuple(e) if isinstance(e, (tuple, list)) else e
+                 for e in entries))
+        for pat, entries in getattr(cfg, "sharding_overrides", ()) or ()
+    }
+
+
 def param_shardings(params, mesh: Mesh, fsdp: bool = False, overrides: Optional[Dict[str, P]] = None):
     """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs)."""
     overrides = overrides or {}

@@ -32,6 +32,7 @@ from repro.distributed.sharding import (
     batch_spec,
     cache_shardings,
     constrain_worker_tree,
+    overrides_from_config,
     param_shardings,
     worker_grad_spec,
 )
@@ -109,7 +110,8 @@ def make_train_step(
     # unpacking just splits the one egress all-gather into many — keep the
     # replicated reshard_out there.
     params_shape = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
-    params_sh = param_shardings(params_shape, mesh, fsdp=cfg.fsdp)
+    params_sh = param_shardings(params_shape, mesh, fsdp=cfg.fsdp,
+                                overrides=overrides_from_config(cfg))
     egress_sh = params_sh if cfg.fsdp else None
 
     def loss_of(params, b):

@@ -17,6 +17,8 @@ from repro.kernels.cclip_fused import cclip_fused_iter
 from repro.kernels.cwise_median import cwise_median
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.pairwise_gram import pairwise_gram
+from repro.kernels.selection_network import selection_program
+from repro.kernels.trimmed_mean import cwise_trimmed_mean
 from repro.kernels.weiszfeld_norms import residual_norms
 
 __all__ = [
@@ -24,7 +26,9 @@ __all__ = [
     "cclip_combine",
     "cclip_fused_iter",
     "cwise_median",
+    "cwise_trimmed_mean",
     "flash_attention",
     "pairwise_gram",
     "residual_norms",
+    "selection_program",
 ]

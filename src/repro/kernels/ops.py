@@ -10,6 +10,7 @@ in tests/test_kernels.py):
 
   gram(xs, acc=...)           stats phase for Krum / RFA / CCLIP
   cm_aggregate(xs)            full coordinate-wise median
+  tm_aggregate(xs, n_trim)    coordinate-wise trimmed mean (sorted band)
   mix_apply(M, xs)            bucketing / resampling application
   norms(xs, c | center=v)     residual sq-norms (Weiszfeld / CCLIP inner loop)
   cclip_iter(xs, v, lam)      one fused CCLIP iteration (combine + next norms)
@@ -42,6 +43,7 @@ from repro.kernels.cclip_combine import cclip_combine
 from repro.kernels.cclip_fused import cclip_fused_iter
 from repro.kernels.cwise_median import cwise_median
 from repro.kernels.pairwise_gram import pairwise_gram
+from repro.kernels.trimmed_mean import cwise_trimmed_mean
 from repro.kernels.weiszfeld_norms import residual_norms
 
 
@@ -55,8 +57,12 @@ def gram(xs: jnp.ndarray, acc: jnp.ndarray | None = None, *,
                          interpret=_interp())
 
 
-def cm_aggregate(xs: jnp.ndarray, *, block_d: int = 1024) -> jnp.ndarray:
+def cm_aggregate(xs: jnp.ndarray, *, block_d: int = 4096) -> jnp.ndarray:
     return cwise_median(xs, block_d=block_d, interpret=_interp())
+
+
+def tm_aggregate(xs: jnp.ndarray, n_trim: int, *, block_d: int = 4096) -> jnp.ndarray:
+    return cwise_trimmed_mean(xs, n_trim, block_d=block_d, interpret=_interp())
 
 
 def mix_apply(mix: jnp.ndarray, xs: jnp.ndarray, *, block_d: int = 2048) -> jnp.ndarray:

@@ -23,6 +23,12 @@ def cwise_median(xs: jnp.ndarray) -> jnp.ndarray:
     return jnp.median(xs.astype(jnp.float32), axis=0)
 
 
+def cwise_trimmed_mean(xs: jnp.ndarray, n_trim: int) -> jnp.ndarray:
+    """Mean of the sorted [n_trim, W-n_trim) worker band. [W, d] -> [d] fp32."""
+    s = jnp.sort(xs.astype(jnp.float32), axis=0)
+    return jnp.mean(s[n_trim: xs.shape[0] - n_trim], axis=0)
+
+
 def bucket_mix(mix: jnp.ndarray, xs: jnp.ndarray) -> jnp.ndarray:
     """Apply the mixing operator: [m, W] @ [W, d] -> [m, d] fp32."""
     return mix.astype(jnp.float32) @ xs.astype(jnp.float32)

@@ -1,0 +1,143 @@
+"""Batcher odd-even-merge selection networks (the order-statistic engine).
+
+The coordinate-wise aggregators (median, trimmed mean) need a handful of
+order statistics of W worker values per coordinate, with W static and small
+(<= 64). A data-oblivious compare-exchange network keeps the whole
+computation branch-free vectorized min/max over ``[d]`` rows — the same
+shape Mosaic wants on TPU and XLA fuses into one elementwise loop on CPU —
+but the previous odd-even *transposition* network cost O(W^2) comparators
+(300 for W=25). This module generates Batcher's odd-even merge sort
+(O(W log^2 W): 63 comparators at W=16, 191 at W=32, 543 at W=64) and then
+shrinks it twice:
+
+1. **Sentinel elimination.** Batcher networks are defined for power-of-two
+   sizes; W is padded to P with +inf sentinels in slots W..P-1. Because
+   every comparator routes the min to its lower slot index, a slot >= W
+   holds +inf at every point of the schedule, so any comparator touching a
+   sentinel slot is a no-op: the P-network restricted to pairs with
+   ``j < W`` sorts the W real rows without the sentinels ever existing.
+
+2. **Rank pruning.** Walking the remaining program backwards, a comparator
+   is kept only if one of its output slots feeds a later kept comparator or
+   is itself a requested order statistic; both of its input slots then
+   become needed. Median keeps the middle 1-2 ranks, trimmed mean the
+   ``[b, W-b)`` band — e.g. W=25 median needs 93 comparators instead of 300.
+
+Programs are pure Python tuples built from static (W, ranks) and cached, so
+both the Pallas kernels and the jnp aggregators unroll the identical static
+compare-exchange sequence at trace time (this is what makes the packed and
+per-leaf engines bit-exact).
+
+Note jnp.minimum/jnp.maximum propagate NaN from either input, matching the
+previous transposition network (NaN inputs were never sorted correctly by
+either; callers feed finite gradients).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Pair = Tuple[int, int]
+
+
+def _oems_pairs(n: int) -> List[Pair]:
+    """Comparator list of Batcher's odd-even merge sort for power-of-two n,
+    in schedule order; every pair (i, j) has i < j (min routed to i)."""
+    pairs: List[Pair] = []
+
+    def merge(lo: int, hi: int, r: int) -> None:
+        step = r * 2
+        if step < hi - lo:
+            merge(lo, hi, step)
+            merge(lo + r, hi, step)
+            for i in range(lo + r, hi - r, step):
+                pairs.append((i, i + r))
+        else:
+            pairs.append((lo, lo + r))
+
+    def sort(lo: int, hi: int) -> None:  # inclusive bounds
+        if hi - lo >= 1:
+            mid = lo + (hi - lo) // 2
+            sort(lo, mid)
+            sort(mid + 1, hi)
+            merge(lo, hi, 1)
+
+    if n > 1:
+        sort(0, n - 1)
+    return pairs
+
+
+@functools.lru_cache(maxsize=None)
+def selection_program(n_rows: int, ranks: Tuple[int, ...]) -> Tuple[Pair, ...]:
+    """Static compare-exchange program that places the requested order
+    statistics (``ranks``, ascending 0-based positions of the sorted order)
+    of ``n_rows`` values into their slots. Slots outside ``ranks`` hold
+    unspecified values after the program runs."""
+    if not ranks:
+        return ()
+    if min(ranks) < 0 or max(ranks) >= n_rows:
+        raise ValueError(f"ranks {ranks} out of range for n_rows={n_rows}")
+    pow2 = 1 << max(0, (n_rows - 1).bit_length())
+    pairs = [(i, j) for (i, j) in _oems_pairs(pow2) if j < n_rows]
+    needed = set(ranks)
+    kept: List[Pair] = []
+    for i, j in reversed(pairs):
+        if i in needed or j in needed:
+            kept.append((i, j))
+            needed.add(i)
+            needed.add(j)
+    return tuple(reversed(kept))
+
+
+def apply_program(rows: Sequence[jnp.ndarray], program: Sequence[Pair]):
+    """Run a compare-exchange program over a list of same-shape arrays.
+    Fully unrolled: each pair is one vectorized min + max."""
+    rows = list(rows)
+    for i, j in program:
+        lo = jnp.minimum(rows[i], rows[j])
+        hi = jnp.maximum(rows[i], rows[j])
+        rows[i], rows[j] = lo, hi
+    return rows
+
+
+def median_ranks(n_rows: int) -> Tuple[int, ...]:
+    mid = n_rows // 2
+    return (mid,) if n_rows % 2 else (mid - 1, mid)
+
+
+def trim_ranks(n_rows: int, n_trim: int) -> Tuple[int, ...]:
+    """The ``[b, n_rows - b)`` band kept by the trimmed mean."""
+    return tuple(range(n_trim, n_rows - n_trim))
+
+
+def select_rows(x: jnp.ndarray, ranks: Sequence[int]) -> List[jnp.ndarray]:
+    """Order statistics ``ranks`` of ``x`` along axis 0 (each ``x[i]`` may
+    have any trailing shape). Returns one array per rank, in rank order."""
+    ranks = tuple(ranks)
+    rows = apply_program(
+        [x[i] for i in range(x.shape[0])], selection_program(x.shape[0], ranks)
+    )
+    return [rows[r] for r in ranks]
+
+
+def median_select(x: jnp.ndarray) -> jnp.ndarray:
+    """Coordinate-wise median of ``x`` over axis 0 via the pruned network;
+    value-equal to ``jnp.median(x, axis=0)`` (same multiset -> same middle)."""
+    sel = select_rows(x, median_ranks(x.shape[0]))
+    return sel[0] if len(sel) == 1 else 0.5 * (sel[0] + sel[1])
+
+
+def trimmed_mean_select(x: jnp.ndarray, n_trim: int) -> jnp.ndarray:
+    """Coordinate-wise mean of the sorted ``[n_trim, W - n_trim)`` band over
+    axis 0. ``n_trim == 0`` skips the network (a mean is order-free)."""
+    n = x.shape[0]
+    if n_trim == 0:
+        return jnp.mean(x, axis=0)
+    band = select_rows(x, trim_ranks(n, n_trim))
+    acc = band[0]
+    for row in band[1:]:
+        acc = acc + row
+    return acc / float(len(band))

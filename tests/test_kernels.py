@@ -13,6 +13,7 @@ from repro.kernels import (
     bucket_mix,
     cclip_combine,
     cwise_median,
+    cwise_trimmed_mean,
     pairwise_gram,
     residual_norms,
 )
@@ -41,6 +42,24 @@ def test_cwise_median(shape, dtype):
     np.testing.assert_allclose(
         cwise_median(xs), ref.cwise_median(xs), rtol=1e-6, atol=1e-6
     )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cwise_trimmed_mean(shape, dtype):
+    W, d = shape
+    xs = _xs(shape, dtype)
+    for n_trim in sorted({0, 1, (W - 1) // 2}):
+        np.testing.assert_allclose(
+            cwise_trimmed_mean(xs, n_trim), ref.cwise_trimmed_mean(xs, n_trim),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+def test_cwise_trimmed_mean_rejects_empty_band():
+    xs = _xs((4, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        cwise_trimmed_mean(xs, 2)  # band [2, 2) would be empty
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -84,6 +103,10 @@ def test_block_size_invariance(block_d):
     )
     np.testing.assert_allclose(
         cwise_median(xs, block_d=block_d), ref.cwise_median(xs), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        cwise_trimmed_mean(xs, 3, block_d=block_d), ref.cwise_trimmed_mean(xs, 3),
+        rtol=1e-6, atol=1e-6,
     )
 
 

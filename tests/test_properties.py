@@ -90,3 +90,70 @@ def test_kernel_gram_psd(seed, W, d):
     np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)
     eig = np.linalg.eigvalsh(g)
     assert eig.min() > -1e-3 * max(1.0, eig.max())
+
+
+# ------------------------------------------- selection-network order engine
+@given(seed=st.integers(0, 10_000), w=st.integers(2, 64), d=st.integers(1, 33))
+@settings(max_examples=25, deadline=None)
+def test_selection_median_matches_sort_oracle(seed, w, d):
+    """Odd and even W, ragged d: the pruned-network median (Pallas kernel
+    and pure-jnp apply) equals the jnp.sort oracle exactly — the network
+    computes the same value multiset per column."""
+    from repro.kernels import ops
+    from repro.kernels.selection_network import median_select
+
+    xs = _xs(seed, w, d)
+    s = jnp.sort(xs, axis=0)
+    want = s[w // 2] if w % 2 else 0.5 * (s[w // 2 - 1] + s[w // 2])
+    np.testing.assert_array_equal(np.asarray(median_select(xs)), np.asarray(want))
+    np.testing.assert_allclose(ops.cm_aggregate(xs), want, rtol=1e-6, atol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), w=st.integers(2, 64), d=st.integers(1, 33),
+       data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_selection_trimmed_mean_matches_sort_oracle(seed, w, d, data):
+    from repro.kernels import ops
+    from repro.kernels.selection_network import trimmed_mean_select
+
+    b = data.draw(st.integers(0, (w - 1) // 2))
+    xs = _xs(seed, w, d)
+    want = jnp.mean(jnp.sort(xs, axis=0)[b: w - b], axis=0)
+    np.testing.assert_allclose(trimmed_mean_select(xs, b), want,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ops.tm_aggregate(xs, b), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 10_000), w=st.integers(2, 32), pad=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_selection_inf_padding_rows_are_inert(seed, w, pad):
+    """Sentinel elimination: +inf padding rows below the real rows never
+    alter the real order statistics (the property that lets the kernels
+    filter the Batcher network to pairs with j < W)."""
+    from repro.kernels.selection_network import select_rows
+
+    xs = _xs(seed, w, 7)
+    padded = jnp.concatenate([xs, jnp.full((pad, 7), jnp.inf)], axis=0)
+    s = jnp.sort(xs, axis=0)
+    got = select_rows(padded, range(w))
+    for r in range(w):
+        np.testing.assert_array_equal(np.asarray(got[r]), np.asarray(s[r]))
+
+
+@given(seed=st.integers(0, 10_000), w=st.integers(2, 64), data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_selection_non_contiguous_rank_subsets(seed, w, data):
+    """Arbitrary (non-contiguous) rank sets match the sort oracle
+    rank-for-rank, and rank pruning never produces a program larger than
+    the full filtered network."""
+    from repro.kernels.selection_network import select_rows, selection_program
+
+    ranks = tuple(sorted(data.draw(
+        st.sets(st.integers(0, w - 1), min_size=1, max_size=min(w, 6)))))
+    xs = _xs(seed, w, 9)
+    s = jnp.sort(xs, axis=0)
+    for r, row in zip(ranks, select_rows(xs, ranks)):
+        np.testing.assert_array_equal(np.asarray(row), np.asarray(s[r]))
+    assert len(selection_program(w, ranks)) <= len(
+        selection_program(w, tuple(range(w))))

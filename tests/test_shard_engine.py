@@ -100,6 +100,14 @@ if MULTI:
         np.testing.assert_allclose(got, jnp.median(xs, axis=0),
                                    rtol=1e-6, atol=1e-6)
 
+    def test_sharded_tm_matches_single_device(key):
+        xs = _stack(key)
+        mesh = _mesh()
+        got = jax.jit(lambda b: shard_kernels.tm_aggregate(b, 2, mesh,
+                                                           block_d=BLOCK_D))(xs)
+        want = jnp.mean(jnp.sort(xs, axis=0)[2:-2], axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
     def test_sharded_residual_norms_both_forms(key):
         xs = _stack(key)
         mesh = _mesh()
@@ -173,27 +181,64 @@ if MULTI:
 
     def test_no_silent_jnp_fallback_on_multi_device_mesh(key, monkeypatch):
         """use_kernels=True on a non-trivial mesh must route through the
-        shard_map wrappers — the pre-PR behavior silently used jnp."""
+        shard_map wrappers — RFA/CCLIP through the FUSED sharded
+        compositions (no [W, W] Gram detour), CM/TM through the sharded
+        selection kernels; the Gram route remains only for the rules that
+        genuinely need the Gram matrix (krum, acclip)."""
         tree = _tree(key)
         mesh = _mesh()
-        hits = {"gram": 0, "mix": 0, "cm": 0}
-        og, om, oc = (shard_kernels.gram, shard_kernels.mix_apply,
-                      shard_kernels.cm_aggregate)
-        monkeypatch.setattr(packing.shard_kernels, "gram",
-                            lambda *a, **k: hits.__setitem__("gram", hits["gram"] + 1) or og(*a, **k))
-        monkeypatch.setattr(packing.shard_kernels, "mix_apply",
-                            lambda *a, **k: hits.__setitem__("mix", hits["mix"] + 1) or om(*a, **k))
-        monkeypatch.setattr(packing.shard_kernels, "cm_aggregate",
-                            lambda *a, **k: hits.__setitem__("cm", hits["cm"] + 1) or oc(*a, **k))
+        hits = {}
+        for name in ("gram", "mix_apply", "cm_aggregate", "tm_aggregate",
+                     "rfa_aggregate", "cclip_aggregate"):
+            orig = getattr(shard_kernels, name)
+
+            def wrapper(*a, _orig=orig, _n=name, **kw):
+                hits[_n] = hits.get(_n, 0) + 1
+                return _orig(*a, **kw)
+
+            monkeypatch.setattr(packing.shard_kernels, name, wrapper)
+
         k = jax.random.PRNGKey(0)
-        ra = RobustAggregator.from_spec("rfa", mixing="bucketing", s=2)
-        robust_gradient_sync(tree, ra, key=k, mesh=mesh, engine="packed",
-                             block_d=BLOCK_D, use_kernels=True)
-        assert hits["gram"] == 1 and hits["mix"] == 1  # stats + combine
-        ra_cm = RobustAggregator.from_spec("cm", mixing="bucketing", s=2)
-        robust_gradient_sync(tree, ra_cm, key=k, mesh=mesh, engine="packed",
-                             block_d=BLOCK_D, use_kernels=True)
-        assert hits["cm"] == 1 and hits["mix"] == 2  # + mixing phase
+
+        def run(spec, **kw):
+            hits.clear()
+            ra = RobustAggregator.from_spec(spec, mixing="bucketing", s=2, **kw)
+            robust_gradient_sync(tree, ra, key=k, mesh=mesh, engine="packed",
+                                 block_d=BLOCK_D, use_kernels=True)
+            return dict(hits)
+
+        h = run("rfa")
+        assert h.get("rfa_aggregate") == 1 and "gram" not in h, h
+        h = run("cclip", tau=3.0)
+        assert h.get("cclip_aggregate") == 1 and "gram" not in h, h
+        h = run("cm")
+        assert h.get("cm_aggregate") == 1 and h.get("mix_apply") == 1, h
+        h = run("tm", n_trim=2)
+        assert h.get("tm_aggregate") == 1 and h.get("mix_apply") == 1, h
+        h = run("krum", n_byzantine=2)
+        assert h.get("gram") == 1 and h.get("mix_apply") == 1, h
+
+    @pytest.mark.parametrize("agg,kwargs", [("cm", {}), ("tm", {"n_trim": 2})],
+                             ids=["cm", "tm"])
+    def test_sharded_cm_tm_bit_match_per_leaf_oracle(key, agg, kwargs):
+        """The coordinatewise kernels are column-local (every output
+        coordinate depends only on its own column, through the same static
+        selection program), so the packed multi-device route must BIT-match
+        the single-device per-leaf kernel oracle."""
+        tree = _tree(key)
+        mesh = _mesh()
+        ra = RobustAggregator.from_spec(agg, mixing="bucketing", s=2, **kwargs)
+        k = jax.random.PRNGKey(3)
+        with mesh:
+            packed, _ = jax.jit(lambda t, kk: robust_gradient_sync(
+                t, ra, key=kk, mesh=mesh, engine="packed", block_d=BLOCK_D,
+                use_kernels=True))(tree, k)
+        oracle, _ = robust_gradient_sync(tree, ra, key=k, mesh=None,
+                                         engine="per_leaf", block_d=BLOCK_D,
+                                         use_kernels=True)
+        for a, b in zip(jax.tree_util.tree_leaves(packed),
+                        jax.tree_util.tree_leaves(oracle)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     # ------------------------------------------------- param-sharded egress
     def test_param_sharded_egress_skips_replicated_buffer(key):

@@ -108,6 +108,34 @@ def test_train_step_mean_baseline_matches_robust_with_mean(mesh):
                                    np.asarray(b, np.float32), rtol=2e-3, atol=2e-3)
 
 
+def test_sharding_overrides_land_in_train_step(mesh):
+    """gemma-7b carries a per-arch sharding override (the ROADMAP hillclimb
+    lever): the tied embed is forced to P("data", "model") instead of the
+    inferred rule. Assert the override survives the whole config ->
+    make_train_step pipeline and actually lands in the step shardings."""
+    from repro.distributed.sharding import overrides_from_config, param_shardings
+
+    cfg = smoke_config("gemma-7b")
+    assert overrides_from_config(cfg) == {"^embed$": P("data", "model")}
+
+    byz = ByzConfig(aggregator="rfa", mixing="bucketing", s=2)
+    with mesh:
+        _, sh = make_train_step(cfg, byz, mesh, lr=1e-2)
+    assert sh["params"]["embed"].spec == P("data", "model")
+    # and it is the override that put it there — the inferred rule differs
+    params_shape = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    plain = param_shardings(params_shape, mesh, fsdp=cfg.fsdp)
+    assert plain["embed"].spec != sh["params"]["embed"].spec
+    # non-override leaves are untouched by the override machinery
+    for path in plain:
+        if path != "embed":
+            same = jax.tree_util.tree_map(lambda a, b: a == b,
+                                          plain[path], sh["params"][path])
+            assert all(jax.tree_util.tree_leaves(same)), path
+    # configs without overrides decode to an empty mapping
+    assert overrides_from_config(smoke_config("tinyllama-1.1b")) == {}
+
+
 def test_serve_step_executes(mesh):
     cfg = smoke_config("qwen2.5-14b")
     shape = InputShape("test_decode", seq_len=64, global_batch=2, kind="decode")
