@@ -40,6 +40,7 @@ from benchmarks.common import Reporter
 from repro.core.aragg import RobustAggregator
 from repro.distributed.robust_sync import robust_gradient_sync
 from repro.kernels import ops
+from repro.telemetry import EventLog
 
 # engine sweep: ~131k params split into L equal leaves (a transformer has
 # hundreds of leaves; a fused MLP has a handful). block_d=128 keeps the
@@ -240,7 +241,17 @@ def smoke_check() -> int:
 
 
 def main(reporter=None):
-    rep = reporter or Reporter("agg_microbench")
+    # standalone runs also stream every row as a `bench_row` structured
+    # event — same JSONL schema as the probe script and the simulators
+    # (repro/telemetry/events.py), so downstream tooling parses one format.
+    log = None
+    if reporter is None:
+        root = Path(__file__).resolve().parents[1]
+        log = EventLog(root / "BENCH_agg_microbench.jsonl",
+                       run_id="agg_microbench")
+        log.run_meta(benchmark="agg_microbench", units="us_per_call")
+        reporter = Reporter("agg_microbench", event_log=log)
+    rep = reporter
     key = jax.random.PRNGKey(0)
     for (W, d) in [(25, 100_352), (53, 100_352)]:
         xs = jax.random.normal(key, (W, d), jnp.float32)
@@ -263,6 +274,8 @@ def main(reporter=None):
     cclip_fusion_sweep(rep, jax.random.fold_in(key, 2))
     egress_bytes_sweep(rep)
     _write_json(rep)
+    if log is not None:
+        log.close()
     return rep
 
 

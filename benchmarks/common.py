@@ -22,6 +22,7 @@ from repro.configs.base import ByzConfig
 from repro.data.partition import long_tail_subsample, worker_datasets
 from repro.data.synthetic import make_train_test
 from repro.models.mlp import accuracy, init_mlp, nll_loss
+from repro.telemetry import EventLog
 from repro.training.byzantine import ByzantineSim, label_flip_targets
 
 # benchmark-scale defaults (paper: 600/4500 iters, n<=53; CPU budget: below)
@@ -114,18 +115,42 @@ def is_label_flip(attack: str) -> bool:
     return attack == "lf"
 
 
-class Reporter:
-    """Collects (benchmark, cell, value) rows and prints the run.py CSV."""
+def timeit_us(fn, *args, iters: int = 20, warmup: int = 3, **kwargs) -> Dict[str, float]:
+    """Wall-time ``fn(*args, **kwargs)`` honestly: ``perf_counter`` clock and
+    ``jax.block_until_ready`` on every timed result, so async dispatch can't
+    make device work look instant. Returns mean/min microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append((time.perf_counter() - t0) * 1e6)
+    arr = np.asarray(times)
+    return {"mean_us": float(arr.mean()), "min_us": float(arr.min()),
+            "max_us": float(arr.max()), "iters": iters}
 
-    def __init__(self, name: str):
+
+class Reporter:
+    """Collects (benchmark, cell, value) rows and prints the run.py CSV.
+
+    With an ``EventLog`` attached, every row is also emitted as a
+    ``bench_row`` structured event — the same JSONL schema the probe
+    scripts and simulators write (repro/telemetry/events.py)."""
+
+    def __init__(self, name: str, event_log: Optional[EventLog] = None):
         self.name = name
         self.rows = []
-        self._t0 = time.time()
+        self.event_log = event_log
+        self._t0 = time.perf_counter()
 
     def add(self, cell: str, value: float, **extra):
         self.rows.append({"benchmark": self.name, "cell": cell,
                           "value": value, **extra})
+        if self.event_log is not None:
+            self.event_log.bench_row(
+                self.name, {"cell": cell, **extra}, {"value": value})
         print(f"  {self.name:14s} {cell:42s} {value:.4f}", flush=True)
 
     def done(self) -> float:
-        return time.time() - self._t0
+        return time.perf_counter() - self._t0

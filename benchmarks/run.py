@@ -57,12 +57,12 @@ def main() -> None:
     all_rows = []
     for name in selected:
         print(f"== {name} ==", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         out = jobs[name]()
         reps = out if isinstance(out, tuple) else (out,)
         for rep in reps:
             all_rows.extend(rep.rows)
-        print(f"-- {name} done in {time.time() - t0:.0f}s", flush=True)
+        print(f"-- {name} done in {time.perf_counter() - t0:.0f}s", flush=True)
 
     print("\nbenchmark,cell,value")
     for r in all_rows:

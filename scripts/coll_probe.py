@@ -2,6 +2,11 @@
 then compare the packed engine's two egress modes (replicated reshard-out vs
 param-sharded unpack) on the same production mesh.
 
+Besides the human-readable rows, every result is emitted as a ``probe``
+structured event through ``repro.telemetry.EventLog`` — the same JSONL
+schema the benchmark harness and simulators write. Pass ``--jsonl PATH`` to
+persist the events (default: in-memory only, text output unchanged).
+
 All work lives in ``main()``: the 512 placeholder host devices are forced
 via ``repro.launch.dryrun.activate()`` right before the first backend init,
 never at import time (ast-import-env-mutation).
@@ -27,9 +32,17 @@ def main(argv=None):
     from repro.distributed.steps import batch_shardings, input_specs, make_train_step
     from repro.launch.hlo_analysis import collective_bytes, iter_collectives
     from repro.launch.mesh import make_production_mesh
+    from repro.telemetry import EventLog
 
+    jsonl_path = None
+    if "--jsonl" in argv:
+        i = argv.index("--jsonl")
+        jsonl_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
     arch = argv[0] if len(argv) > 0 else "tinyllama-1.1b"
     agg = argv[1] if len(argv) > 1 else "rfa"
+    log = EventLog(jsonl_path, run_id="coll_probe")
+    log.run_meta(script="coll_probe", arch=arch, aggregator=agg)
     byz = ByzConfig(aggregator=agg, mixing="bucketing", s=2,
                     worker_momentum=0.9, delta=0.1)
     cfg = get_config(arch)
@@ -60,6 +73,12 @@ def main(argv=None):
     print(f"total coll bytes (scan body once): {tot/1e9:.1f} GB, {len(rows)} ops")
     for b, op, name in rows[:15]:
         print(f"{b/1e9:8.2f}GB {op:18s} {name}")
+    log.probe("train_collectives", {
+        "arch": arch, "aggregator": agg, "total_bytes": tot,
+        "n_ops": len(rows),
+        "top_ops": [{"bytes": b, "kind": op, "op_name": name}
+                    for b, op, name in rows[:15]],
+    })
 
     # ---- egress mode comparison (replicated reshard_out vs param-sharded)
     # Standalone packed sync on a synthetic FSDP-shardable tree: the egress
@@ -93,6 +112,14 @@ def main(argv=None):
           f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in rep_hlo})")
     print(f"  param-sharded: {sum(par_b.values())/1e9:.3f} GB  {par_b}"
           f"  (f32[{n_pad}] materialized: {f'f32[{n_pad}]' in par_hlo})")
+    log.probe("egress_comparison", {
+        "n_workers": W, "n_pad": n_pad,
+        "replicated": {"total_bytes": sum(rep_b.values()), "by_kind": rep_b,
+                       "npad_row_materialized": f"f32[{n_pad}]" in rep_hlo},
+        "param_sharded": {"total_bytes": sum(par_b.values()), "by_kind": par_b,
+                          "npad_row_materialized": f"f32[{n_pad}]" in par_hlo},
+    })
+    log.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,87 @@
+"""CI telemetry smoke: 5 telemetry-on rounds on 8 forced host devices.
+
+Runs a tiny cross-device simulation (ALIE cohort attack, RFA + bucketing)
+with the in-graph telemetry engine enabled, writes every round's
+device-resident metrics pytree as ``round`` events through
+``repro.telemetry.EventLog``, then re-reads the file with
+``validate_jsonl`` — the full producer -> JSONL -> schema loop the
+observability docs promise.  Exits nonzero if any metric is missing,
+unregistered, or non-finite where finiteness is required.
+
+Usage:  PYTHONPATH=src python scripts/telemetry_smoke.py [out.jsonl]
+
+The 8 host devices are forced inside ``main`` before jax's backend
+initializes, never at import time (ast-import-env-mutation).
+"""
+
+import os
+import sys
+
+N_DEVICES = 8
+N_ROUNDS = 5
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    out_path = argv[0] if argv else "telemetry_smoke.jsonl"
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={N_DEVICES} " + flags)
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ByzConfig
+    from repro.data.partition import worker_datasets
+    from repro.data.synthetic import make_train_test
+    from repro.models.mlp import init_mlp, nll_loss
+    from repro.telemetry import EventLog, validate_jsonl
+    from repro.training.cross_device import CrossDeviceSim
+
+    assert jax.device_count() == N_DEVICES, (
+        f"expected {N_DEVICES} forced host devices, got {jax.device_count()}")
+
+    X, Y, _, _ = make_train_test(jax.random.PRNGKey(0), n_train=1200,
+                                 n_test=100)
+    wx, wy = worker_datasets(X, Y, n_good=18, n_byz=2, noniid=True)
+    byz = ByzConfig(aggregator="rfa", mixing="bucketing", s=2, attack="alie",
+                    attack_kwargs=(("n", 10), ("f", 2)), n_byzantine=0)
+    sim = CrossDeviceSim(loss_fn=nll_loss, byz=byz, n_clients=20,
+                         byz_frac=0.1, clients_per_round=10, lr=0.5,
+                         batch_size=16, telemetry=True)
+
+    params = init_mlp(jax.random.PRNGKey(1))
+    if os.path.exists(out_path):
+        os.remove(out_path)
+    with EventLog(out_path, run_id="telemetry_smoke") as log:
+        log.run_meta(script="telemetry_smoke", n_devices=jax.device_count(),
+                     rounds=N_ROUNDS, aggregator=byz.aggregator,
+                     mixing=byz.mixing, attack=byz.attack)
+        _, hist = sim.run(params, np.asarray(wx), np.asarray(wy), N_ROUNDS,
+                          jax.random.PRNGKey(2))
+        tele = hist["telemetry"]
+        assert tele, "telemetry-on run produced an empty metrics pytree"
+        for t in range(N_ROUNDS):
+            log.round(t, {name: arr[t] for name, arr in tele.items()})
+
+    events = validate_jsonl(out_path)
+    rounds = [e for e in events if e["kind"] == "round"]
+    assert len(rounds) == N_ROUNDS, (len(rounds), N_ROUNDS)
+    names = sorted(rounds[0]["metrics"])
+    for must in ("agg_norm", "byz_in_cohort", "byz_mask", "rfa_residual",
+                 "sync_egress_bytes", "worker_weights"):
+        assert must in names, f"round events missing metric {must!r}"
+    for e in rounds:
+        agg_norm = e["metrics"]["agg_norm"]
+        assert np.isfinite(agg_norm), f"non-finite agg_norm: {agg_norm}"
+    print(f"telemetry smoke OK: {len(events)} events "
+          f"({len(rounds)} rounds) -> {out_path}")
+    print(f"round metrics: {', '.join(names)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,6 +69,14 @@ class HloCheckSpec:
     expect_pallas_custom_call: bool = False  # enforce only on tpu/gpu
     check_budget: bool = True
     tolerance: Optional[float] = None        # overrides the budget file's
+    #: check against ANOTHER target's committed budget instead of this
+    #: target's own file (e.g. the telemetry-off program against the seed
+    #: budget). Such targets never write a budget on --update-budgets.
+    budget_name: Optional[str] = None
+    #: exact comparison: collective counts and bytes must EQUAL the budget
+    #: dict (zero tolerance, no slack, no unknown kinds in either
+    #: direction). This is the "telemetry off adds nothing" invariant.
+    exact: bool = False
 
 
 # ------------------------------------------------------------------ budgets
@@ -108,15 +116,49 @@ def write_budget(budget: Dict, budget_dir: Optional[str] = None) -> str:
     return path
 
 
+def _check_budget_exact(hlo_text: str, spec: HloCheckSpec,
+                        budget: Dict) -> List[Finding]:
+    """Byte-identical budget comparison (``HloCheckSpec.exact``): every
+    collective kind's count AND bytes must equal the committed budget, in
+    both directions. Used to prove the telemetry-off compile IS the seed
+    collective schedule — one extra psum or one extra transferred byte
+    fails."""
+    findings: List[Finding] = []
+    ref = budget.get("target", spec.budget_name or spec.name)
+    measured = {"collective_counts": collective_counts(hlo_text),
+                "collective_bytes": collective_bytes(hlo_text)}
+    committed = {"collective_counts": budget.get("collective_counts", {}),
+                 "collective_bytes": budget.get("collective_bytes", {})}
+    for field, rule in (("collective_counts", "hlo-collective-count-budget"),
+                        ("collective_bytes", "hlo-collective-bytes-budget")):
+        got, want = measured[field], committed[field]
+        if got == want:
+            continue
+        for kind in sorted(set(got) | set(want)):
+            g, w = got.get(kind, 0), want.get(kind, 0)
+            if g != w:
+                findings.append(Finding(
+                    rule=rule, severity=ERROR, target=spec.name,
+                    location=f"op kind {kind}",
+                    message=(f"{field.split('_')[1]} of {kind}: {g} != "
+                             f"{w} committed for {ref!r} (exact match "
+                             f"required — this program must compile to the "
+                             f"byte-identical collective schedule)")))
+    return findings
+
+
 def _check_budget(hlo_text: str, spec: HloCheckSpec,
                   budget: Optional[Dict]) -> List[Finding]:
+    budget_ref = spec.budget_name or spec.name
     if budget is None:
         return [Finding(
             rule="hlo-budget-missing", severity=ERROR, target=spec.name,
-            location=budget_path(spec.name),
+            location=budget_path(budget_ref),
             message=("no committed collective budget for this target — "
                      "run `python -m repro.analysis --update-budgets` and "
                      "commit the generated file"))]
+    if spec.exact:
+        return _check_budget_exact(hlo_text, spec, budget)
     findings: List[Finding] = []
     tol = spec.tolerance if spec.tolerance is not None else float(
         budget.get("tolerance", DEFAULT_TOLERANCE))
@@ -243,6 +285,7 @@ def lint_hlo(hlo_text: str, spec: HloCheckSpec, backend: str = "cpu",
                 + _check_replicated(hlo_text, spec)
                 + _check_pallas(hlo_text, spec, backend))
     if spec.check_budget:
-        findings += _check_budget(hlo_text, spec,
-                                  load_budget(spec.name, budget_dir))
+        findings += _check_budget(
+            hlo_text, spec,
+            load_budget(spec.budget_name or spec.name, budget_dir))
     return findings

@@ -24,6 +24,13 @@ BLOCK_D = 256
 TRAIN_ARCH = "qwen2.5-14b"  # fsdp + server-momentum family (smoke-sized)
 TRAIN_TARGET = "train_step_qwen2_5_14b_smoke"
 
+#: targets that check ANOTHER target's committed budget (HloCheckSpec.
+#: budget_name, exact match) — they never own a budget file and are
+#: skipped by ``--update-budgets``'s write phase.
+BUDGET_ALIASES = {
+    "sync_telemetry_off_rfa_bucketing": "sync_kernels_rfa_bucketing",
+}
+
 
 @dataclasses.dataclass
 class AnalysisTarget:
@@ -75,7 +82,10 @@ def _trace(fn, *args, mesh=None):
 
 def _build_sync_target(name: str, aggregator: str, mixing: str,
                        use_kernels: bool, param_sharded: bool,
-                       description: str) -> AnalysisTarget:
+                       description: str,
+                       telemetry: bool = False,
+                       budget_name: Optional[str] = None,
+                       exact: bool = False) -> AnalysisTarget:
     import jax
 
     from repro.core.aragg import RobustAggregator
@@ -96,7 +106,8 @@ def _build_sync_target(name: str, aggregator: str, mixing: str,
     def sync(t, k):
         out, _ = robust_gradient_sync(
             t, ra, key=k, mesh=mesh, engine="packed", block_d=BLOCK_D,
-            use_kernels=use_kernels, out_shardings=out_sh)
+            use_kernels=use_kernels, out_shardings=out_sh,
+            telemetry=telemetry)
         return out
 
     jaxpr, hlo = _trace(sync, tree, jax.random.PRNGKey(5), mesh=mesh)
@@ -104,6 +115,8 @@ def _build_sync_target(name: str, aggregator: str, mixing: str,
         name=name,
         forbid_replicated=(f"f32[{packer.n_pad}]",) if param_sharded else (),
         expect_pallas_custom_call=use_kernels,
+        budget_name=budget_name,
+        exact=exact,
     )
     return AnalysisTarget(name=name, hlo_text=hlo, jaxpr=jaxpr, spec=spec,
                           expect_pallas=use_kernels, description=description)
@@ -168,6 +181,17 @@ _BUILDERS = {
         description=("packed sync, fused multi-device CCLIP route (column-"
                      "sharded cclip_aggregate instead of Gram-space "
                      "weights) — kernel-presence + collective budget")),
+    "sync_telemetry_off_rfa_bucketing": lambda: _build_sync_target(
+        "sync_telemetry_off_rfa_bucketing", "rfa", "bucketing",
+        use_kernels=True, param_sharded=False,
+        telemetry=False,
+        budget_name=BUDGET_ALIASES["sync_telemetry_off_rfa_bucketing"],
+        exact=True,
+        description=("packed sync with telemetry explicitly OFF — must "
+                     "compile to the byte-identical collective schedule as "
+                     "sync_kernels_rfa_bucketing (exact budget match, zero "
+                     "tolerance): proof that the observability layer adds "
+                     "no collectives when disabled")),
     TRAIN_TARGET: lambda: _build_train_target(
         TRAIN_TARGET, TRAIN_ARCH,
         description=("full train step, smoke-sized FSDP arch with server "

@@ -27,7 +27,7 @@ Every aggregator supports two equivalent forms:
 from __future__ import annotations
 
 import abc
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,12 +55,39 @@ class Aggregator(abc.ABC):
         w = self.coeffs(gram, key=key)
         return jnp.tensordot(w.astype(xs.dtype), xs, axes=1)
 
+    def aggregate_and_stats(
+        self, xs: jnp.ndarray, key: Optional[jax.Array] = None
+    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """``aggregate`` plus the telemetry stats dict.
+
+        The stats variants add scan outputs / post-hoc reductions but never
+        touch the carry math, so the aggregate matches ``aggregate(xs, key)``
+        up to XLA fusion-level rounding (~1 ulp — extra scan ys change how
+        the body fuses). The telemetry-OFF path never calls this, so off
+        stays bit-exact vs seed. Only called on telemetry-on paths."""
+        from repro.telemetry import probes  # local: telemetry is optional
+
+        if self.coordinatewise:
+            out = self.combine_leaf(xs)
+            return out, probes.coordinatewise_stats(self, xs, out)
+        gram = (xs.astype(jnp.float32) @ xs.astype(jnp.float32).T)
+        w, stats = self.coeffs_and_stats(gram, key=key)
+        stats["bucket_dispersion"] = probes.bucket_dispersion_from_gram(gram)
+        return jnp.tensordot(w.astype(xs.dtype), xs, axes=1), stats
+
     # ------------------------------------------------------------- factorized
     def coeffs(self, gram: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
         """Combination coefficients ``[n]`` from the Gram matrix ``[n, n]``."""
         raise NotImplementedError(
             f"{type(self).__name__} does not implement the Gram-space form"
         )
+
+    def coeffs_and_stats(
+        self, gram: jnp.ndarray, key: Optional[jax.Array] = None
+    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """``coeffs`` plus the telemetry stats dict (same numerics contract
+        as ``aggregate_and_stats``). Default: no stats."""
+        return self.coeffs(gram, key=key), {}
 
     def combine_leaf(self, xs_leaf: jnp.ndarray) -> jnp.ndarray:
         """Exact leaf-local aggregation ``[n, ...] -> [...]`` (coordinatewise only)."""

@@ -28,6 +28,17 @@ import jax.numpy as jnp
 from repro.core.aggregators.base import Aggregator
 
 
+def _cclip_stats(lam_seq: jnp.ndarray, tau_seq: jnp.ndarray) -> dict:
+    """Common telemetry dict from per-iteration clip weights and radii."""
+    lam32 = lam_seq.astype(jnp.float32)
+    return {
+        "cclip_lam": lam32,                                     # [T, n]
+        "cclip_clip_frac": jnp.mean(
+            (lam32 < 1.0).astype(jnp.float32), axis=1),         # [T]
+        "cclip_tau": jnp.asarray(tau_seq, jnp.float32),         # [T]
+    }
+
+
 class AdaptiveCenteredClip(Aggregator):
     """ACClip — beyond-paper: the paper's stated open problem (§6.4,
     Remark 3: "Ideally, one would want to adaptively and automatically set
@@ -75,6 +86,21 @@ class AdaptiveCenteredClip(Aggregator):
         v, _ = jax.lax.scan(body, v, None, length=self.n_iters)
         return v
 
+    def aggregate_and_stats(self, xs, key=None):
+        v = jnp.mean(xs, axis=0)
+
+        def body(v, _):
+            diff = xs - v[None, :]
+            norms = jnp.sqrt(
+                jnp.sum(jnp.square(diff.astype(jnp.float32)), axis=1) + self.eps
+            )
+            tau = self.tau_mult * jnp.median(norms)
+            lam = jnp.minimum(1.0, tau / norms).astype(xs.dtype)
+            return v + jnp.mean(lam[:, None] * diff, axis=0), (lam, tau)
+
+        v, (lam_seq, tau_seq) = jax.lax.scan(body, v, None, length=self.n_iters)
+        return v, _cclip_stats(lam_seq, tau_seq)
+
     def coeffs(self, gram: jnp.ndarray, key: Optional[object] = None) -> jnp.ndarray:
         n = gram.shape[0]
         gram = gram.astype(jnp.float32)
@@ -93,6 +119,25 @@ class AdaptiveCenteredClip(Aggregator):
 
         c, _ = jax.lax.scan(body, c0, None, length=self.n_iters)
         return c
+
+    def coeffs_and_stats(self, gram, key=None):
+        n = gram.shape[0]
+        gram = gram.astype(jnp.float32)
+        c0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+        def resid_sq_norms(c):
+            gc = gram @ c
+            quad = c @ gc
+            return jnp.maximum(quad - 2.0 * gc + jnp.diagonal(gram), 0.0)
+
+        def body(c, _):
+            norms = jnp.sqrt(resid_sq_norms(c) + self.eps)
+            tau = self.tau_mult * jnp.median(norms)
+            lam = jnp.minimum(1.0, tau / norms)
+            return c * (1.0 - jnp.mean(lam)) + lam / n, (lam, tau)
+
+        c, (lam_seq, tau_seq) = jax.lax.scan(body, c0, None, length=self.n_iters)
+        return c, _cclip_stats(lam_seq, tau_seq)
 
 
 class CenteredClip(Aggregator):
@@ -117,6 +162,20 @@ class CenteredClip(Aggregator):
         v, _ = jax.lax.scan(body, v, None, length=self.n_iters)
         return v
 
+    def aggregate_and_stats(self, xs, key=None):
+        v = jnp.mean(xs, axis=0)
+        tau = jnp.float32(self.tau)
+
+        def body(v, _):
+            diff = xs - v[None, :]
+            norms = jnp.sqrt(jnp.sum(jnp.square(diff.astype(jnp.float32)), axis=1) + self.eps)
+            lam = jnp.minimum(1.0, self.tau / norms).astype(xs.dtype)
+            v_new = v + jnp.mean(lam[:, None] * diff, axis=0)
+            return v_new, (lam, tau)
+
+        v, (lam_seq, tau_seq) = jax.lax.scan(body, v, None, length=self.n_iters)
+        return v, _cclip_stats(lam_seq, tau_seq)
+
     # ---------------------------------------------------------- gram space
     def coeffs(self, gram: jnp.ndarray, key: Optional[object] = None) -> jnp.ndarray:
         n = gram.shape[0]
@@ -137,3 +196,23 @@ class CenteredClip(Aggregator):
 
         c, _ = jax.lax.scan(body, c0, None, length=self.n_iters)
         return c
+
+    def coeffs_and_stats(self, gram, key=None):
+        n = gram.shape[0]
+        gram = gram.astype(jnp.float32)
+        c0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+        tau = jnp.float32(self.tau)
+
+        def resid_sq_norms(c):
+            gc = gram @ c
+            quad = c @ gc
+            return jnp.maximum(quad - 2.0 * gc + jnp.diagonal(gram), 0.0)
+
+        def body(c, _):
+            norms = jnp.sqrt(resid_sq_norms(c) + self.eps)
+            lam = jnp.minimum(1.0, self.tau / norms)
+            c_new = c * (1.0 - jnp.mean(lam)) + lam / n
+            return c_new, (lam, tau)
+
+        c, (lam_seq, tau_seq) = jax.lax.scan(body, c0, None, length=self.n_iters)
+        return c, _cclip_stats(lam_seq, tau_seq)

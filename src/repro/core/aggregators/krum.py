@@ -53,6 +53,21 @@ class Krum(Aggregator):
         w = w.at[order[: self.m]].set(1.0 / self.m)
         return w
 
+    def coeffs_and_stats(self, gram, key: Optional[object] = None):
+        n = gram.shape[0]
+        s = self.scores(gram)
+        stats = {
+            "krum_scores": s,
+            "krum_selected": jnp.argmin(s).astype(jnp.int32),
+        }
+        if self.m <= 1:
+            w = jnp.zeros((n,), jnp.float32).at[jnp.argmin(s)].set(1.0)
+            return w, stats
+        order = jnp.argsort(s)
+        w = jnp.zeros((n,), jnp.float32)
+        w = w.at[order[: self.m]].set(1.0 / self.m)
+        return w, stats
+
     def selected_index(self, xs: jnp.ndarray) -> jnp.ndarray:
         """Index of the selected worker (used by the Figure-6 experiment)."""
         gram = xs.astype(jnp.float32) @ xs.astype(jnp.float32).T

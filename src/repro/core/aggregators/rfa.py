@@ -52,3 +52,30 @@ class RFA(Aggregator):
 
         c, _ = jax.lax.scan(body, c0, None, length=self.n_iters)
         return c
+
+    def coeffs_and_stats(self, gram, key=None):
+        """``coeffs`` + per-iteration residual norms. Identical carry math —
+        only the scan's ys output is added (fusion may shift the result by
+        ~1 ulp; the telemetry-off path still calls plain ``coeffs``)."""
+        n = gram.shape[0]
+        gram = gram.astype(jnp.float32)
+        c0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+        def resid_sq_norms(c):
+            gc = gram @ c
+            quad = c @ gc
+            return jnp.maximum(quad - 2.0 * gc + jnp.diagonal(gram), 0.0)
+
+        def body(c, _):
+            r = jnp.sqrt(resid_sq_norms(c) + self.eps**2)
+            w = 1.0 / r
+            c_new = w / jnp.sum(w)
+            return c_new, r
+
+        c, r_seq = jax.lax.scan(body, c0, None, length=self.n_iters)
+        stats = {
+            "rfa_resid_norms": r_seq,                      # [T, n]
+            "rfa_residual": jnp.sum(r_seq, axis=1),        # [T] Weiszfeld objective
+            "rfa_iters": self.n_iters,
+        }
+        return c, stats

@@ -89,6 +89,18 @@ class RobustAggregator:
         ys = self.mixer.apply(mix_key, xs)
         return self.base.aggregate(ys, key=agg_key)
 
+    def aggregate_with_stats(self, xs, key: Optional[jax.Array] = None):
+        """``__call__`` plus the base rule's telemetry stats dict.
+
+        Same math as ``__call__`` — only extra scan outputs are added inside
+        ``aggregate_and_stats`` (agreement to ~1 ulp; the telemetry-off path
+        is ``__call__`` itself and stays bit-exact vs seed). Stats are keyed
+        per *mixed row* (post-bucketing); with ``mixing="none"`` they
+        attribute directly to workers."""
+        mix_key, agg_key = (None, None) if key is None else tuple(jax.random.split(key))
+        ys = self.mixer.apply(mix_key, xs)
+        return self.base.aggregate_and_stats(ys, key=agg_key)
+
     # ------------------------------------------------------------- gram space
     def worker_weights_from_gram(
         self, gram: jnp.ndarray, key: Optional[jax.Array] = None
@@ -103,6 +115,27 @@ class RobustAggregator:
         gram_y = m @ gram.astype(jnp.float32) @ m.T
         c = self.base.coeffs(gram_y, key=agg_key)
         return m.T @ c
+
+    def worker_weights_and_stats_from_gram(
+        self, gram: jnp.ndarray, key: Optional[jax.Array] = None
+    ):
+        """``worker_weights_from_gram`` plus telemetry stats (weights agree
+        to ~1 ulp — see ``aggregate_with_stats``). Adds per-bucket dispersion
+        from the mixed Gram matrix and the final per-worker weights
+        ``M^T c``."""
+        from repro.telemetry import probes  # local: telemetry is optional
+
+        if self.base.coordinatewise:
+            raise ValueError("coordinatewise base rules do not use Gram weights")
+        n = gram.shape[0]
+        mix_key, agg_key = (None, None) if key is None else tuple(jax.random.split(key))
+        m = self.mixer.matrix(mix_key, n)
+        gram_y = m @ gram.astype(jnp.float32) @ m.T
+        c, stats = self.base.coeffs_and_stats(gram_y, key=agg_key)
+        w = m.T @ c
+        stats["bucket_dispersion"] = probes.bucket_dispersion_from_gram(gram_y)
+        stats["worker_weights"] = w
+        return w, stats
 
     def mixing_matrix(self, key: Optional[jax.Array], n: int) -> jnp.ndarray:
         mix_key = None if key is None else jax.random.split(key)[0]

@@ -71,6 +71,8 @@ import jax.numpy as jnp
 from repro.core.aragg import RobustAggregator
 from repro.distributed import shard_kernels
 from repro.kernels import ops
+from repro.telemetry import InflightMetrics, phase
+from repro.telemetry import probes as _probes
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -226,6 +228,7 @@ def packed_robust_sync(
     block_d: int = 2048,
     use_kernels: Optional[bool] = None,
     out_shardings: Any = None,
+    telemetry: bool = False,
 ) -> Tuple[Any, dict]:
     """Aggregate per-worker gradient trees (leaves ``[W, ...]``) into one
     gradient tree on a single packed buffer. Returns ``(grads, info)``.
@@ -237,7 +240,16 @@ def packed_robust_sync(
     (shard_map-partitioned on multi-device — module docstring); pass
     ``False`` for the plain-jnp GSPMD path. ``out_shardings`` (a tree of
     ``NamedSharding`` matching ``grads_w`` sans worker axis) selects the
-    param-sharded egress instead of the replicated one."""
+    param-sharded egress instead of the replicated one.
+
+    ``telemetry=True`` adds ``info["telemetry"]`` — a device-resident
+    metrics pytree (clip fractions, Weiszfeld residuals, Krum scores, trim
+    masks, per-bucket dispersion, layout counters; repro/telemetry) riding
+    out as ordinary outputs. With the default False the traced program is
+    the SEED program: bit-exact outputs and byte-identical collective
+    budgets, machine-checked by the ``sync_telemetry_off_*`` analysis
+    target. The ``jax.named_scope`` phase markers are always on — they
+    annotate HLO metadata only and add zero operations."""
     packer = packer_for(grads_w, block_d=block_d)
     leaves = jax.tree_util.tree_leaves(grads_w)
     W = leaves[0].shape[0]
@@ -247,24 +259,44 @@ def packed_robust_sync(
         use_kernels = True
     sharded = use_kernels and not _mesh_is_trivial(mesh)
     info: dict = {}
+    tm = InflightMetrics(telemetry)
+    if tm:
+        tm.put("sync_n_workers", W)
+        tm.put("sync_n_params", packer.n_params)
+        tm.put("sync_n_pad", packer.n_pad)
+        tm.put("sync_ingress_bytes", W * packer.n_pad * 4)
+        tm.put("sync_egress_bytes",
+               packer.n_params * 4
+               if (out_shardings is not None and mesh is not None)
+               else packer.n_pad * 4)
 
     def egress(out):
-        if out_shardings is None or mesh is None:
-            return packer.unpack(reshard_out(out, mesh))
-        return unpack_to_shardings(packer, out, out_shardings)
+        with phase("unpack"):
+            if out_shardings is None or mesh is None:
+                return packer.unpack(reshard_out(out, mesh))
+            return unpack_to_shardings(packer, out, out_shardings)
 
-    buf = reshard_in(packer.pack(grads_w), mesh)  # [W, n_pad] fp32
+    def finish(out):
+        if tm:
+            info["telemetry"] = tm.tree()
+        return egress(out), info
+
+    with phase("pack"):
+        buf = reshard_in(packer.pack(grads_w), mesh)  # [W, n_pad] fp32
 
     if aggregator.base.coordinatewise:
         mix_key = None if key is None else jax.random.split(key)[0]
         m = aggregator.mixer.matrix(mix_key, W)
-        if not use_kernels:
-            mixed = m @ buf
-            out = aggregator.base.combine_leaf(mixed)
-        else:
-            mixed = (shard_kernels.mix_apply(m, buf, mesh, block_d=block_d)
-                     if sharded else ops.mix_apply(m, buf, block_d=block_d))
-            if aggregator.base.name == "cm":
+        with phase("mix"):
+            if not use_kernels:
+                mixed = m @ buf
+            else:
+                mixed = (shard_kernels.mix_apply(m, buf, mesh, block_d=block_d)
+                         if sharded else ops.mix_apply(m, buf, block_d=block_d))
+        with phase("kernel"):
+            if not use_kernels:
+                out = aggregator.base.combine_leaf(mixed)
+            elif aggregator.base.name == "cm":
                 out = (shard_kernels.cm_aggregate(mixed, mesh, block_d=block_d)
                        if sharded else ops.cm_aggregate(mixed, block_d=block_d))
             elif aggregator.base.name == "tm":
@@ -276,7 +308,17 @@ def packed_robust_sync(
                     mixed, mesh, aggregator.base.combine_leaf)
             else:
                 out = aggregator.base.combine_leaf(mixed)
-        return egress(out), info
+        if tm:
+            # probe math over the (possibly column-sharded) mixed buffer;
+            # GSPMD inserts the column psums — telemetry-on programs only.
+            tm.put("bucket_dispersion", lambda: _probes.bucket_dispersion(mixed))
+            if aggregator.base.name == "cm":
+                tm.put("cm_worker_dev", lambda: _probes.cm_worker_dev(
+                    mixed, out, packer.n_params))
+            elif aggregator.base.name == "tm":
+                tm.put("tm_trim_frac", lambda: _probes.tm_trim_frac(
+                    mixed, aggregator.base.n_trim, packer.n_params))
+        return finish(out)
 
     if sharded and aggregator.base.name in ("rfa", "cclip"):
         # fused multi-device route: mix in vector space, then the sharded
@@ -289,34 +331,48 @@ def packed_robust_sync(
         base = aggregator.base
         mix_key = None if key is None else jax.random.split(key)[0]
         m = aggregator.mixer.matrix(mix_key, W)
-        mixed = shard_kernels.mix_apply(m, buf, mesh, block_d=block_d)
-        if base.name == "cclip":
-            out = shard_kernels.cclip_aggregate(
-                mixed, base.tau, mesh, n_iters=base.n_iters, eps=base.eps,
-                block_d=block_d)
-        else:
-            out = shard_kernels.rfa_aggregate(
-                mixed, mesh, n_iters=base.n_iters, eps=base.eps,
-                block_d=block_d)
-        return egress(out), info
+        with phase("mix"):
+            mixed = shard_kernels.mix_apply(m, buf, mesh, block_d=block_d)
+        with phase("kernel"):
+            if base.name == "cclip":
+                out = shard_kernels.cclip_aggregate(
+                    mixed, base.tau, mesh, n_iters=base.n_iters, eps=base.eps,
+                    block_d=block_d, with_stats=telemetry)
+            else:
+                out = shard_kernels.rfa_aggregate(
+                    mixed, mesh, n_iters=base.n_iters, eps=base.eps,
+                    block_d=block_d, with_stats=telemetry)
+        if tm:
+            out, stats = out
+            tm.update(stats)
+            tm.put("bucket_dispersion", lambda: _probes.bucket_dispersion(mixed))
+        return finish(out)
 
-    if not use_kernels:
-        gram = buf @ buf.T
-    elif sharded:
-        gram = shard_kernels.gram(buf, mesh, block_d=block_d)
-    else:
-        gram = ops.gram(buf, block_d=block_d)
-    weights = aggregator.worker_weights_from_gram(gram, key=key)
+    with phase("gram"):
+        if not use_kernels:
+            gram = buf @ buf.T
+        elif sharded:
+            gram = shard_kernels.gram(buf, mesh, block_d=block_d)
+        else:
+            gram = ops.gram(buf, block_d=block_d)
+    with phase("coeff"):
+        if tm:
+            weights, stats = aggregator.worker_weights_and_stats_from_gram(
+                gram, key=key)
+            tm.update(stats)
+        else:
+            weights = aggregator.worker_weights_from_gram(gram, key=key)
     info["agg_weights"] = weights
     info["gram_diag_mean"] = jnp.mean(jnp.diagonal(gram))
-    if not use_kernels:
-        out = weights @ buf
-    elif sharded:
-        out = shard_kernels.mix_apply(weights[None, :], buf, mesh,
-                                      block_d=block_d)[0]
-    else:
-        out = ops.mix_apply(weights[None, :], buf, block_d=block_d)[0]
-    return egress(out), info
+    with phase("combine"):
+        if not use_kernels:
+            out = weights @ buf
+        elif sharded:
+            out = shard_kernels.mix_apply(weights[None, :], buf, mesh,
+                                          block_d=block_d)[0]
+        else:
+            out = ops.mix_apply(weights[None, :], buf, block_d=block_d)[0]
+    return finish(out)
 
 
 def packed_aggregate(
@@ -325,14 +381,20 @@ def packed_aggregate(
     key: Optional[jax.Array] = None,
     block_d: int = 2048,
     use_kernels: Optional[bool] = None,
-) -> jnp.ndarray:
+    telemetry: bool = False,
+    with_info: bool = False,
+):
     """Packed engine on an already-stacked ``[W, d]`` matrix -> ``[d]``.
 
     The kernel-accelerated counterpart of ``RobustAggregator.__call__`` for
     callers that hold a flat stack (the cross-device FL server, benchmark
-    harnesses): same mixing + rule, one pass over one padded buffer."""
-    out_tree, _ = packed_robust_sync(
+    harnesses): same mixing + rule, one pass over one padded buffer.
+    ``with_info=True`` returns ``(out, info)`` — with ``telemetry=True``
+    the info carries the device-resident metrics pytree."""
+    out_tree, info = packed_robust_sync(
         [xs], aggregator, key=key, mesh=None, block_d=block_d,
-        use_kernels=use_kernels,
+        use_kernels=use_kernels, telemetry=telemetry,
     )
+    if with_info:
+        return out_tree[0], info
     return out_tree[0]

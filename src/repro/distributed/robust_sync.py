@@ -147,8 +147,14 @@ def _per_leaf_sync(
     mesh,
     use_kernels: bool,
     block_d: int,
+    telemetry: bool = False,
 ) -> Tuple[Any, dict]:
-    """The per-leaf fallback engine (two collectives per leaf; docstring)."""
+    """The per-leaf fallback engine (two collectives per leaf; docstring).
+
+    ``telemetry=True`` adds ``info["telemetry"]`` from the Gram-space probes
+    (non-coordinatewise rules only — the coordinatewise route has no stacked
+    buffer to probe without materializing one; use the packed engine for
+    CM/TM telemetry)."""
     leaves = jax.tree_util.tree_leaves(grads_w)
     n_workers = leaves[0].shape[0]
     info: dict = {}
@@ -183,7 +189,12 @@ def _per_leaf_sync(
 
     gram = tree_gram(grads_w, n_workers, mesh=mesh, use_kernels=use_kernels,
                      block_d=block_d)
-    weights = aggregator.worker_weights_from_gram(gram, key=key)
+    if telemetry:
+        weights, stats = aggregator.worker_weights_and_stats_from_gram(
+            gram, key=key)
+        info["telemetry"] = stats
+    else:
+        weights = aggregator.worker_weights_from_gram(gram, key=key)
     info["agg_weights"] = weights
     info["gram_diag_mean"] = jnp.mean(jnp.diagonal(gram))
     combined = tree_combine(grads_w, weights, mesh=mesh,
@@ -200,6 +211,7 @@ def robust_gradient_sync(
     block_d: int = 2048,
     use_kernels: Optional[bool] = None,
     out_shardings: Any = None,
+    telemetry: bool = False,
 ) -> Tuple[Any, dict]:
     """Aggregate per-worker gradient trees (leaves ``[W, ...]``) into one
     gradient tree, using mixing + the robust rule. Returns (grads, info).
@@ -210,16 +222,20 @@ def robust_gradient_sync(
     Pallas route on every mesh for the packed engine (shard_map-partitioned
     on multi-device), and to pure jnp for the per-leaf engine.
     ``out_shardings`` (NamedSharding tree matching the gradients sans
-    worker axis) selects the param-sharded egress."""
+    worker axis) selects the param-sharded egress. ``telemetry=True`` adds
+    the device-resident metrics pytree as ``info["telemetry"]``; the
+    default False traces the seed program exactly (repro/telemetry)."""
     if engine == "packed":
         return packing.packed_robust_sync(
             grads_w, aggregator, key=key, mesh=mesh, block_d=block_d,
             use_kernels=use_kernels, out_shardings=out_shardings,
+            telemetry=telemetry,
         )
     if engine != "per_leaf":
         raise ValueError(f"unknown sync engine {engine!r}")
     out, info = _per_leaf_sync(grads_w, aggregator, key, mesh,
-                               bool(use_kernels), block_d)
+                               bool(use_kernels), block_d,
+                               telemetry=telemetry)
     if out_shardings is not None and mesh is not None:
         out = jax.tree_util.tree_map(
             jax.lax.with_sharding_constraint, out, out_shardings)

@@ -172,25 +172,44 @@ def cclip_fused_iter(buf: jnp.ndarray, v: jnp.ndarray, lam: jnp.ndarray,
 
 # ------------------------------------------------------------- compositions
 def rfa_aggregate(xs: jnp.ndarray, mesh, *, n_iters: int = 8,
-                  eps: float = 1e-6, block_d: int = 2048) -> jnp.ndarray:
+                  eps: float = 1e-6, block_d: int = 2048,
+                  with_stats: bool = False):
     """Mesh-partitioned counterpart of ``ops.rfa_aggregate``: smoothed
-    Weiszfeld with one sharded norms pass (+psum) per iteration."""
+    Weiszfeld with one sharded norms pass (+psum) per iteration.
+
+    ``with_stats=True`` additionally returns the telemetry stats dict (the
+    per-iteration residual norms the loop computes anyway, exported as scan
+    ys). With the default False, the traced program is the seed program —
+    no extra outputs, no extra collectives."""
     W = xs.shape[0]
 
     def body(c, _):
         r2 = residual_norms(xs, c, mesh=mesh, block_d=block_d)
         w = 1.0 / jnp.sqrt(r2 + eps**2)
-        return w / jnp.sum(w), None
+        return w / jnp.sum(w), (r2 if with_stats else None)
 
     c0 = jnp.full((W,), 1.0 / W, jnp.float32)
-    c, _ = jax.lax.scan(body, c0, None, length=n_iters)
-    return mix_apply(c[None, :], xs, mesh, block_d=block_d)[0]
+    c, r2_seq = jax.lax.scan(body, c0, None, length=n_iters)
+    out = mix_apply(c[None, :], xs, mesh, block_d=block_d)[0]
+    if not with_stats:
+        return out
+    r_seq = jnp.sqrt(r2_seq + eps**2)
+    stats = {
+        "rfa_resid_norms": r_seq,                  # [T, W]
+        "rfa_residual": jnp.sum(r_seq, axis=1),    # [T]
+        "rfa_iters": n_iters,
+    }
+    return out, stats
 
 
 def cclip_aggregate(xs: jnp.ndarray, tau: float, mesh, *, n_iters: int = 3,
-                    eps: float = 1e-12, block_d: int = 2048) -> jnp.ndarray:
+                    eps: float = 1e-12, block_d: int = 2048,
+                    with_stats: bool = False):
     """Mesh-partitioned counterpart of ``ops.cclip_aggregate``: one fused
-    sharded pass per iteration (combine column-local, norms psum)."""
+    sharded pass per iteration (combine column-local, norms psum).
+
+    ``with_stats=True`` additionally returns the telemetry stats dict (clip
+    weights per iteration as scan ys). False traces the seed program."""
     W = xs.shape[0]
     v = mix_apply(jnp.full((1, W), 1.0 / W, jnp.float32), xs, mesh,
                   block_d=block_d)[0]
@@ -199,7 +218,17 @@ def cclip_aggregate(xs: jnp.ndarray, tau: float, mesh, *, n_iters: int = 3,
     def body(carry, _):
         v, r2 = carry
         lam = jnp.minimum(1.0, tau / jnp.sqrt(r2 + eps))
-        return cclip_fused_iter(xs, v, lam, mesh, block_d=block_d), None
+        new_carry = cclip_fused_iter(xs, v, lam, mesh, block_d=block_d)
+        return new_carry, (lam if with_stats else None)
 
-    (v, _), _ = jax.lax.scan(body, (v, r2), None, length=n_iters)
-    return v
+    (v, _), lam_seq = jax.lax.scan(body, (v, r2), None, length=n_iters)
+    if not with_stats:
+        return v
+    lam32 = lam_seq.astype(jnp.float32)
+    stats = {
+        "cclip_lam": lam32,                        # [T, W]
+        "cclip_clip_frac": jnp.mean(
+            (lam32 < 1.0).astype(jnp.float32), axis=1),
+        "cclip_tau": jnp.full((n_iters,), tau, jnp.float32),
+    }
+    return v, stats

@@ -87,12 +87,18 @@ def make_train_step(
     mesh,
     lr: float = 1e-3,
     optimizer: str = "sgdm",
+    telemetry: bool = False,
 ) -> Tuple[Callable, Dict[str, Any]]:
     """Returns (step_fn, shardings) where
     step_fn(params, opt_state, worker_m, key, batch) ->
         (params, opt_state, worker_m, metrics).
     ``worker_m`` is a zeros-like stacked tree for momentum_mode=worker, else
     an empty dict. ``shardings`` maps each argument to NamedShardings.
+
+    ``telemetry=True`` adds the sync's device-resident metrics pytree as
+    ``metrics["telemetry"]`` (repro/telemetry). The flag is baked into the
+    closure, so the step's signature and jit cache are unaffected; with the
+    default False the traced program is the seed program.
     """
     W = mesh_n_workers(mesh)
     aggregator = byz.make_aggregator(W)
@@ -152,11 +158,13 @@ def make_train_step(
                 messages = grads_w
             agg_grads, info = robust_gradient_sync(
                 messages, aggregator, key=key, mesh=mesh, engine="packed",
-                out_shardings=egress_sh,
+                out_shardings=egress_sh, telemetry=telemetry,
             )
 
         params, opt_state = opt_update(agg_grads, opt_state, params)
         metrics = {"loss": loss}
+        if telemetry and "telemetry" in info:
+            metrics["telemetry"] = info["telemetry"]
         return params, opt_state, worker_m, metrics
 
     # ----- shardings (params_sh computed above, before step_fn)

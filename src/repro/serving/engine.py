@@ -25,6 +25,7 @@ cache sharded by ``cache_shardings``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
@@ -32,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tfm
+from repro.telemetry import EventLog, RingTimer
 
 
 @dataclasses.dataclass
@@ -42,6 +44,9 @@ class Request:
     eos_id: Optional[int] = None
     # filled on completion:
     output: Optional[List[int]] = None
+    # telemetry timestamps (perf_counter seconds; None until reached):
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -57,7 +62,7 @@ class _Slot:
 
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_len: int = 256,
-                 sample: str = "greedy"):
+                 sample: str = "greedy", event_log: Optional[EventLog] = None):
         assert not cfg.n_codebooks, "engine currently serves plain-LM archs"
         self.cfg = cfg
         self.params = params
@@ -72,6 +77,13 @@ class ServeEngine:
             lambda p, c, t, pos: tfm.decode_step(p, cfg, c, t, pos)
         )
         self._zero_cache = jax.jit(self._make_zero_cache)
+        # -- telemetry (host-side counters; never touches the jitted step)
+        self.event_log = event_log
+        self.tokens_total = 0
+        self.steps_total = 0
+        self.step_timer = RingTimer(256)      # decode step wall time
+        self.admit_timer = RingTimer(256)     # submit -> slot admission
+        self._token_window: deque = deque(maxlen=256)  # (t, n_new) per step
 
     # ------------------------------------------------------------- plumbing
     @staticmethod
@@ -86,6 +98,7 @@ class ServeEngine:
         return jax.tree_util.tree_map(one, cache)
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -96,6 +109,9 @@ class ServeEngine:
                 req = self.queue.popleft()
                 assert len(req.prompt) + req.max_new_tokens <= self.max_len, (
                     "request exceeds engine max_len")
+                req.t_admit = time.perf_counter()
+                if req.t_submit is not None:
+                    self.admit_timer.record(req.t_admit - req.t_submit)
                 self.slots[i] = _Slot(req=req, pos=0, generated=[])
                 newly = newly.at[i].set(True)
                 any_new = True
@@ -133,9 +149,13 @@ class ServeEngine:
                 toks.append(0)
                 stepped.append(False)
 
+        self.step_timer.start()
         logits, new_cache = self._decode(
             self.params, self.cache,
             jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32))
+        jax.block_until_ready(logits)  # honest step timing (async dispatch)
+        self.step_timer.stop()
+        self.steps_total += 1
 
         # non-stepped slots must keep their cache rows (they were written
         # at `pos` with garbage): restore from the old cache.
@@ -149,6 +169,7 @@ class ServeEngine:
         self.cache = jax.tree_util.tree_map(merge, new_cache, self.cache)
 
         nxt = jnp.argmax(logits, axis=-1)  # greedy
+        n_new = 0
         for i, s in enumerate(self.slots):
             if not (s.active and stepped[i]):
                 continue
@@ -157,12 +178,40 @@ class ServeEngine:
             if s.pos >= len(req.prompt):  # we just consumed prompt/gen token
                 tok = int(nxt[i])
                 s.generated.append(tok)
+                n_new += 1
                 done = (len(s.generated) >= req.max_new_tokens
                         or (req.eos_id is not None and tok == req.eos_id))
                 if done:
                     req.output = list(s.generated[:req.max_new_tokens])
                     self.finished[req.uid] = req
                     self.slots[i] = _Slot()
+        self.tokens_total += n_new
+        self._token_window.append((time.perf_counter(), n_new))
+        if self.event_log is not None:
+            self.event_log.serve(self.stats())
+
+    # ------------------------------------------------------------ telemetry
+    def stats(self) -> Dict[str, float]:
+        """Current engine metrics snapshot (names from the telemetry
+        catalogue: queue depth, active slots, latency, tokens/s)."""
+        out: Dict[str, float] = {
+            "serve_queue_depth": len(self.queue),
+            "serve_active_slots": sum(s.active for s in self.slots),
+            "serve_tokens_total": self.tokens_total,
+            "serve_steps_total": self.steps_total,
+        }
+        if len(self.step_timer):
+            out["serve_decode_step_s"] = self.step_timer.summary()["mean_s"]
+        if len(self.admit_timer):
+            out["serve_admit_latency_s"] = self.admit_timer.summary()["mean_s"]
+        if len(self._token_window) >= 2:
+            t0, _ = self._token_window[0]
+            t1, _ = self._token_window[-1]
+            if t1 > t0:
+                # tokens after the window's first timestamp, over its span
+                n = sum(k for _, k in list(self._token_window)[1:])
+                out["serve_tokens_per_s"] = n / (t1 - t0)
+        return out
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, Request]:
         for _ in range(max_steps):

@@ -1,0 +1,60 @@
+"""``InflightMetrics`` — the functional accumulator threaded through jits.
+
+The accumulator is a trace-time object: inside a jitted function it holds
+traced arrays; the dict it hands back (``tree()``) becomes ordinary extra
+outputs of the compiled program. Nothing here performs a host callback or a
+collective — every recorded value must already be replicated (coefficient-
+space vectors, scalars) or is the caller's responsibility to keep cheap.
+
+Zero-overhead-when-off: a disabled accumulator records nothing AND never
+evaluates lazily-provided values, so guarding a probe as
+
+    tm.put("cclip_clip_frac", lambda: jnp.mean(lam < 1.0, axis=1))
+
+adds literally no equations to the off-trace. The off program is the seed
+program (machine-checked — see repro.analysis's telemetry-off target).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, Union
+
+from repro.telemetry import registry
+
+Value = Union[Any, Callable[[], Any]]
+
+
+class InflightMetrics:
+    """Device-resident metrics pytree accumulated inside a traced function."""
+
+    __slots__ = ("enabled", "_vals")
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = bool(enabled)
+        self._vals: Dict[str, Any] = {}
+
+    def __bool__(self) -> bool:
+        return self.enabled
+
+    def put(self, name: str, value: Value) -> None:
+        """Record one metric. ``value`` may be a zero-arg callable that is
+        ONLY invoked when telemetry is enabled (the zero-overhead guard)."""
+        if not self.enabled:
+            return
+        registry.get_metric(name)  # refuse names missing from the catalogue
+        self._vals[name] = value() if callable(value) else value
+
+    def update(self, stats: Union[Mapping[str, Any], None]) -> None:
+        """Merge a probe's stats dict (e.g. an aggregator's)."""
+        if not self.enabled or not stats:
+            return
+        for k, v in stats.items():
+            self.put(k, v)
+
+    def tree(self) -> Dict[str, Any]:
+        """The metrics pytree to return out of the jit (empty when off)."""
+        return dict(self._vals)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        state = "on" if self.enabled else "off"
+        return f"InflightMetrics({state}, {sorted(self._vals)})"

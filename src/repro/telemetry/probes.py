@@ -1,0 +1,82 @@
+"""Probe math shared by the stacked and packed aggregation paths.
+
+These functions compute *diagnostic* quantities from intermediates the hot
+path already holds. They are only traced when telemetry is ON — on the off
+path they are never called, so they may use conveniences (``jnp.sort``)
+that would be banned from the always-on hot path. On a multi-device mesh
+their column reductions compile to GSPMD psums; that added traffic exists
+only in telemetry-on programs (the off-budget invariant is unaffected).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+
+def bucket_dispersion(mixed: jnp.ndarray,
+                      n_eff: Optional[int] = None) -> jnp.ndarray:
+    """``||y_i - mean_j y_j||^2`` per mixed row, from the stacked buffer.
+
+    ``n_eff`` divides nothing here (squared distances are sums, not means)
+    but is accepted for signature symmetry with the other probes."""
+    del n_eff
+    x = mixed.astype(jnp.float32)
+    centered = x - jnp.mean(x, axis=0, keepdims=True)
+    return jnp.sum(jnp.square(centered), axis=1)
+
+
+def bucket_dispersion_from_gram(gram_y: jnp.ndarray) -> jnp.ndarray:
+    """Same quantity from the mixed Gram matrix (the factorized path):
+    ``||y_i - ybar||^2 = G_ii - 2 mean_j G_ij + mean_jk G_jk``."""
+    g = gram_y.astype(jnp.float32)
+    row_mean = jnp.mean(g, axis=1)
+    return jnp.diagonal(g) - 2.0 * row_mean + jnp.mean(row_mean)
+
+
+def cm_worker_dev(mixed: jnp.ndarray, median: jnp.ndarray,
+                  n_eff: Optional[int] = None) -> jnp.ndarray:
+    """Mean |y_i - median| per input row.
+
+    The ALIE signature: honest rows deviate ~0.8 sigma per coordinate from
+    the median while ALIE rows sit at |z| sigma (z ~= 0.25-0.4) — Byzantine
+    rows are suspiciously CLOSE to the median. ``n_eff`` corrects the mean
+    for zero-padded packed-buffer columns (pad columns contribute 0 to the
+    sum but would dilute a plain mean)."""
+    x = mixed.astype(jnp.float32)
+    dev = jnp.sum(jnp.abs(x - median[None, :].astype(jnp.float32)), axis=1)
+    return dev / float(n_eff if n_eff else mixed.shape[1])
+
+
+def tm_trim_frac(mixed: jnp.ndarray, n_trim: int,
+                 n_eff: Optional[int] = None) -> jnp.ndarray:
+    """Fraction of coordinates where row i fell inside a trimmed band — the
+    compressed trim mask. A row is trimmed at a coordinate when its value is
+    strictly below the b-th smallest kept value or strictly above the b-th
+    largest kept value (ties with the band edge count as kept, matching the
+    mean-of-the-sorted-band semantics of ``trimmed_mean_select``)."""
+    x = mixed.astype(jnp.float32)
+    W = x.shape[0]
+    b = min(int(n_trim), (W - 1) // 2)
+    if b == 0:
+        return jnp.zeros((W,), jnp.float32)
+    srt = jnp.sort(x, axis=0)
+    lo, hi = srt[b], srt[W - 1 - b]
+    mask = (x < lo[None, :]) | (x > hi[None, :])
+    frac = jnp.sum(mask.astype(jnp.float32), axis=1)
+    return frac / float(n_eff if n_eff else mixed.shape[1])
+
+
+def coordinatewise_stats(base, mixed: jnp.ndarray, out: jnp.ndarray,
+                         n_eff: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Stats for a coordinatewise rule given the mixed stack and aggregate.
+
+    ``base`` is the aggregator (``cm`` / ``tm`` get rule-specific masks;
+    every rule gets per-bucket dispersion)."""
+    stats = {"bucket_dispersion": bucket_dispersion(mixed)}
+    if base.name == "cm":
+        stats["cm_worker_dev"] = cm_worker_dev(mixed, out, n_eff)
+    elif base.name == "tm":
+        stats["tm_trim_frac"] = tm_trim_frac(mixed, base.n_trim, n_eff)
+    return stats

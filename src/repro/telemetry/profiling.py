@@ -1,0 +1,52 @@
+"""Phase markers and one-call profiler trace capture.
+
+``phase("pack")`` wraps a region in both ``jax.named_scope`` (annotates the
+jaxpr/HLO so ops carry ``telemetry/pack`` in their op_name metadata) and
+``jax.profiler.TraceAnnotation`` (a named span on the host trace timeline).
+Neither changes the computation: named_scope touches only metadata, so the
+collective budgets checked by ``repro.analysis`` are unaffected — which is
+why the markers are always on, even with ``telemetry=False``.
+
+``trace_capture`` is the one-call helper: run any callable under
+``jax.profiler.start_trace`` / ``stop_trace`` with the result blocked on, so
+the captured timeline actually contains the compute. View the output with
+TensorBoard or Perfetto (``docs/observability.md``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+
+_PREFIX = "telemetry"
+
+
+@contextlib.contextmanager
+def phase(name: str):
+    """Mark a pipeline phase (pack / gram / mix / kernel / unpack / ...).
+
+    Safe both inside a trace (named_scope annotates the jaxpr) and outside
+    (TraceAnnotation shows up as a span when a profiler trace is active;
+    otherwise both are cheap no-ops)."""
+    scoped = f"{_PREFIX}/{name}"
+    with jax.named_scope(scoped), jax.profiler.TraceAnnotation(scoped):
+        yield
+
+
+def trace_capture(logdir: str, fn: Callable[..., Any], *args: Any,
+                  **kwargs: Any) -> Any:
+    """Run ``fn(*args, **kwargs)`` under a jax profiler trace.
+
+    Blocks on the result before stopping the trace so asynchronously
+    dispatched device work is inside the capture window. Returns ``fn``'s
+    result; the trace lands under ``logdir`` (open with TensorBoard's
+    profile plugin or Perfetto)."""
+    jax.profiler.start_trace(logdir)
+    try:
+        out = fn(*args, **kwargs)
+        out = jax.block_until_ready(out)
+    finally:
+        jax.profiler.stop_trace()
+    return out

@@ -66,6 +66,11 @@ class ByzantineSim:
     n_byzantine: int
     lr: float = 0.01
     batch_size: int = 32
+    #: surface the aggregator's device-resident stats (clip fractions,
+    #: Weiszfeld residuals, Krum scores, trim masks — repro/telemetry) in
+    #: the step metrics and run history. Static via ``self``: no signature
+    #: change, one trace per instance, seed numerics when False.
+    telemetry: bool = False
 
     def __post_init__(self):
         self.aggregator = self.byz.make_aggregator(self.n_workers)
@@ -108,7 +113,11 @@ class ByzantineSim:
                                          key=k_attack)
 
         # mixing + robust aggregation
-        agg = self.aggregator(sent, key=k_agg)
+        if self.telemetry:
+            agg, agg_stats = self.aggregator.aggregate_with_stats(sent, key=k_agg)
+        else:
+            agg = self.aggregator(sent, key=k_agg)
+            agg_stats = {}
 
         # server update
         new_params = jax.tree_util.tree_map(
@@ -130,6 +139,13 @@ class ByzantineSim:
                 )
             ),
         }
+        if self.telemetry:
+            tmtree = dict(agg_stats)
+            tmtree["byz_mask"] = self.byz_mask
+            tmtree["grad_norm_mean"] = metrics["grad_norm_mean"]
+            tmtree["agg_norm"] = metrics["agg_norm"]
+            tmtree["zeta_sq"] = metrics["zeta_sq"]
+            metrics["telemetry"] = tmtree
         return (
             SimState(new_params, m, attack_state, state.step + 1),
             metrics,
@@ -146,15 +162,31 @@ class ByzantineSim:
         eval_fn: Optional[Callable] = None,
         eval_every: int = 50,
     ) -> Tuple[SimState, Dict[str, list]]:
+        """Run ``n_steps``. With ``telemetry=True`` the history additionally
+        carries ``history["telemetry"]``: each metric stacked across steps
+        into one numpy array (leading step axis). Device metrics stay jax
+        arrays during the loop — conversion happens once at the end, so
+        async dispatch is never blocked mid-run."""
+        import numpy as np
+
         state = self.init_state(params0)
-        history: Dict[str, list] = {"step": [], "eval": [], "zeta_sq": []}
+        history: Dict[str, Any] = {"step": [], "eval": [], "zeta_sq": []}
+        per_step: Dict[str, list] = {}
         for t in range(n_steps):
             key, sub = jax.random.split(key)
             state, metrics = self.step(state, data_x, data_y, sub)
+            if self.telemetry:
+                for name, v in metrics["telemetry"].items():
+                    per_step.setdefault(name, []).append(v)
             if eval_fn is not None and ((t + 1) % eval_every == 0 or t == n_steps - 1):
                 history["step"].append(t + 1)
                 history["eval"].append(float(eval_fn(state.params)))
                 history["zeta_sq"].append(float(metrics["zeta_sq"]))
+        if self.telemetry:
+            history["telemetry"] = {
+                name: np.stack([np.asarray(v) for v in vs])
+                for name, vs in per_step.items()
+            }
         return state, history
 
 

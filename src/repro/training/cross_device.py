@@ -44,6 +44,11 @@ class CrossDeviceSim:
     lr: float = 0.1
     batch_size: int = 32
     server_momentum: float = 0.9
+    #: surface the packed engine's device-resident metrics pytree in the
+    #: step metrics / run history. Baked into the jit trace via static
+    #: ``self`` — one trace per sim instance either way, so telemetry-on
+    #: runs do NOT retrace per round (tests/test_telemetry.py).
+    telemetry: bool = False
 
     def __post_init__(self):
         self.aggregator = self.byz.make_aggregator(self.clients_per_round)
@@ -84,7 +89,12 @@ class CrossDeviceSim:
         sent, _ = self.attack(g_flat, byz_mask, None, key=k_attack)
         # the cohort stack is already flat, so the packed engine applies
         # directly: kernel-routed mixing + rule on one padded buffer.
-        agg = packed_aggregate(sent, self.aggregator, key=k_agg)
+        if self.telemetry:
+            agg, info = packed_aggregate(sent, self.aggregator, key=k_agg,
+                                         telemetry=True, with_info=True)
+        else:
+            agg = packed_aggregate(sent, self.aggregator, key=k_agg)
+            info = {}
 
         # Remark 7: SERVER momentum on the robust aggregate
         beta = self.server_momentum
@@ -100,17 +110,40 @@ class CrossDeviceSim:
             "byz_in_cohort": jnp.sum(byz_mask),
             "agg_norm": jnp.linalg.norm(agg),
         }
+        if self.telemetry:
+            tmtree = dict(info.get("telemetry", {}))
+            tmtree["byz_mask"] = byz_mask
+            tmtree["byz_in_cohort"] = metrics["byz_in_cohort"]
+            tmtree["agg_norm"] = metrics["agg_norm"]
+            metrics["telemetry"] = tmtree
         return CrossDeviceState(new_params, server_m, state.step + 1), metrics
 
     def run(self, params0, data_x, data_y, n_rounds: int, key,
             eval_fn: Optional[Callable] = None, eval_every: int = 50):
+        """Run ``n_rounds``. Returns ``(state, history)``; with
+        ``telemetry=True`` the history additionally carries
+        ``history["telemetry"]`` — each registered metric stacked across
+        rounds into one numpy array with a leading round axis. Device
+        metrics are kept as jax arrays during the loop (async dispatch is
+        never blocked mid-run) and converted once at the end."""
+        import numpy as np
+
         state = self.init_state(params0)
-        history: Dict[str, list] = {"round": [], "eval": []}
+        history: Dict[str, Any] = {"round": [], "eval": []}
+        per_round: Dict[str, list] = {}
         for t in range(n_rounds):
             key, sub = jax.random.split(key)
             state, metrics = self.step(state, data_x, data_y, sub)
+            if self.telemetry:
+                for name, v in metrics["telemetry"].items():
+                    per_round.setdefault(name, []).append(v)
             if eval_fn is not None and ((t + 1) % eval_every == 0
                                         or t == n_rounds - 1):
                 history["round"].append(t + 1)
                 history["eval"].append(float(eval_fn(state.params)))
+        if self.telemetry:
+            history["telemetry"] = {
+                name: np.stack([np.asarray(v) for v in vs])
+                for name, vs in per_round.items()
+            }
         return state, history

@@ -186,6 +186,75 @@ class TestBudgets:
         assert "--update-budgets" in findings[0].message
 
 
+class TestExactAndAliasedBudgets:
+    """``HloCheckSpec(exact=True)`` (the telemetry-off "adds nothing"
+    invariant) and ``budget_name`` (check another target's budget)."""
+
+    def _write_ref(self, tmp_path, hlo, name="ref"):
+        write_budget(make_budget(hlo, name, tolerance=0.25), str(tmp_path))
+
+    def test_exact_passes_on_identical_program(self, tmp_path):
+        hlo = _golden("start_done_pair.hlo")
+        self._write_ref(tmp_path, hlo)
+        spec = HloCheckSpec(name="off_variant", budget_name="ref", exact=True)
+        assert lint_hlo(hlo, spec, backend="cpu",
+                        budget_dir=str(tmp_path)) == []
+
+    def test_exact_fails_inside_tolerance_band(self, tmp_path):
+        """A bytes drift the tolerant check would wave through (12.5% <
+        25%) must fail the exact check — that is the whole point."""
+        hlo = _golden("start_done_pair.hlo")
+        self._write_ref(tmp_path, hlo)
+        drifted = hlo.replace("%ar = f32[8,128]", "%ar = f32[9,128]")
+        assert drifted != hlo
+        tolerant = lint_hlo(drifted, HloCheckSpec(name="ref"), backend="cpu",
+                            budget_dir=str(tmp_path))
+        assert [f.rule for f in tolerant] == []
+        exact = lint_hlo(drifted,
+                         HloCheckSpec(name="off", budget_name="ref",
+                                      exact=True),
+                         backend="cpu", budget_dir=str(tmp_path))
+        assert [f.rule for f in exact] == ["hlo-collective-bytes-budget"]
+        assert exact[0].severity == ERROR
+        assert "byte-identical" in exact[0].message
+
+    def test_exact_fails_on_one_extra_collective(self, tmp_path):
+        hlo = _golden("start_done_pair.hlo")
+        self._write_ref(tmp_path, hlo)
+        grown = hlo + ("  %ar2 = f32[8,128]{1,0} all-reduce(%p0), "
+                       "to_apply=%add\n")
+        findings = lint_hlo(grown,
+                            HloCheckSpec(name="off", budget_name="ref",
+                                         exact=True),
+                            backend="cpu", budget_dir=str(tmp_path))
+        rules = sorted(f.rule for f in findings)
+        assert rules == ["hlo-collective-bytes-budget",
+                         "hlo-collective-count-budget"]
+        assert all(f.severity == ERROR for f in findings)
+
+    def test_exact_fails_on_missing_collective_kind(self, tmp_path):
+        """Undershoot is a WARNING in tolerant mode; exact mode errors in
+        both directions."""
+        hlo = _golden("start_done_pair.hlo")
+        self._write_ref(tmp_path, hlo)
+        kept = "\n".join(l for l in hlo.splitlines() if "permute" not in l)
+        findings = lint_hlo(kept,
+                            HloCheckSpec(name="off", budget_name="ref",
+                                         exact=True),
+                            backend="cpu", budget_dir=str(tmp_path))
+        assert findings and all(f.severity == ERROR for f in findings)
+        assert any("collective-permute" in f.location for f in findings)
+
+    def test_missing_referenced_budget_names_the_reference(self, tmp_path):
+        hlo = _golden("start_done_pair.hlo")
+        findings = lint_hlo(hlo,
+                            HloCheckSpec(name="off", budget_name="ref",
+                                         exact=True),
+                            backend="cpu", budget_dir=str(tmp_path))
+        assert [f.rule for f in findings] == ["hlo-budget-missing"]
+        assert "ref.json" in findings[0].location
+
+
 # =========================================================== AST rules
 class TestPrngReuse:
     def test_reused_sampler_key_flagged(self):
@@ -419,13 +488,21 @@ def test_dryrun_import_has_no_env_side_effect():
 
 
 def test_budget_files_committed_for_all_targets():
-    """Every analysis target must have a committed budget file."""
+    """Every analysis target must have a committed budget file — except the
+    cross-referencing targets (BUDGET_ALIASES), which check another
+    target's budget and never own a file."""
     from repro.analysis.hlo_lint import BUDGET_DIR
-    from repro.analysis.targets import TARGET_NAMES
+    from repro.analysis.targets import BUDGET_ALIASES, TARGET_NAMES
 
     for name in TARGET_NAMES:
-        path = os.path.join(BUDGET_DIR, f"{name}.json")
+        owner = BUDGET_ALIASES.get(name, name)
+        path = os.path.join(BUDGET_DIR, f"{owner}.json")
         assert os.path.exists(path), f"missing committed budget {path}"
         budget = json.loads(open(path, encoding="utf-8").read())
-        assert budget["target"] == name
+        assert budget["target"] == owner
         assert budget["collective_counts"], name
+    # an aliased target must never grow its own budget file (it would be
+    # dead: lint_hlo always resolves budget_name first)
+    for name in BUDGET_ALIASES:
+        assert name in TARGET_NAMES, name
+        assert not os.path.exists(os.path.join(BUDGET_DIR, f"{name}.json"))

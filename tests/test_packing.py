@@ -213,6 +213,41 @@ def test_exactly_one_reshard_pair_per_sync(key, monkeypatch, agg, n_leaves):
     assert calls == {"in": 1, "out": 1}
 
 
+# ------------------------------------------------------- telemetry contract
+@pytest.mark.parametrize("agg,kwargs", [("rfa", {}), ("cm", {}),
+                                        ("cclip", {"tau": 3.0})],
+                         ids=["rfa", "cm", "cclip"])
+def test_telemetry_off_is_bit_exact_on_is_close(key, agg, kwargs):
+    """``telemetry=False`` (explicit) must execute the SEED program — output
+    bit-identical to the default call AND to the per-leaf kernel oracle
+    (the existing bit-exactness bar is untouched by the observability
+    layer). ``telemetry=True`` may differ only at XLA-fusion level (~1 ulp)
+    and must carry the metrics pytree in the info dict."""
+    tree = _f32_tree(key)
+    ra = RobustAggregator.from_spec(agg, mixing="bucketing", s=3, **kwargs)
+    k = jax.random.PRNGKey(17)
+    out_def, info_def = robust_gradient_sync(tree, ra, key=k, engine="packed",
+                                             block_d=BLOCK_D)
+    out_off, info_off = robust_gradient_sync(tree, ra, key=k, engine="packed",
+                                             block_d=BLOCK_D, telemetry=False)
+    out_oracle, _ = robust_gradient_sync(tree, ra, key=k, engine="per_leaf",
+                                         block_d=BLOCK_D, use_kernels=True)
+    assert "telemetry" not in info_def and "telemetry" not in info_off
+    for a, b, c in zip(jax.tree_util.tree_leaves(out_off),
+                       jax.tree_util.tree_leaves(out_def),
+                       jax.tree_util.tree_leaves(out_oracle)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    out_on, info_on = robust_gradient_sync(tree, ra, key=k, engine="packed",
+                                           block_d=BLOCK_D, telemetry=True)
+    assert "telemetry" in info_on and info_on["telemetry"]
+    for a, b in zip(jax.tree_util.tree_leaves(out_on),
+                    jax.tree_util.tree_leaves(out_off)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-6, atol=2e-6)
+
+
 # ---------------------------------------------------------- flat-stack entry
 def test_packed_aggregate_flat_stack(key):
     xs = jax.random.normal(key, (10, 700), jnp.float32)

@@ -1,0 +1,332 @@
+"""In-graph telemetry engine (repro/telemetry): registry + catalogue, the
+in-flight accumulator's zero-overhead-off contract, probe math, JSONL event
+schema, ring-buffered timing, telemetry through the packed engine and both
+simulators (ALIE must be VISIBLE in the traces), jit-cache stability, and
+the serving engine's structured events."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ByzConfig
+from repro.core.aragg import RobustAggregator
+from repro.distributed.packing import packed_aggregate
+from repro.telemetry import (EventLog, InflightMetrics, MetricSpec, RingTimer,
+                             catalogue, get_metric, phase, register,
+                             validate_event, validate_jsonl)
+from repro.telemetry import probes
+
+
+# ============================================================== registry
+class TestRegistry:
+    def test_catalogue_sorted_and_specs_valid(self):
+        cat = catalogue()
+        assert len(cat) >= 25
+        names = [s.name for s in cat]
+        assert names == sorted(names)
+        for s in cat:
+            assert isinstance(s, MetricSpec) and s.doc
+
+    def test_unregistered_metric_raises(self):
+        with pytest.raises(KeyError, match="unregistered"):
+            get_metric("no_such_metric")
+
+    def test_reregistration_same_spec_ok_conflict_raises(self):
+        spec = get_metric("agg_norm")
+        assert register("agg_norm", spec.phase, spec.kind, spec.doc) == spec
+        with pytest.raises(ValueError, match="already registered"):
+            register("agg_norm", spec.phase, spec.kind, "different doc")
+
+    def test_invalid_phase_or_kind_rejected(self):
+        with pytest.raises(ValueError):
+            MetricSpec("x", "nonsense", "scalar", "d")
+        with pytest.raises(ValueError):
+            MetricSpec("x", "sim", "nonsense", "d")
+
+
+# =============================================================== inflight
+class TestInflightMetrics:
+    def test_disabled_never_evaluates_lazy_value(self):
+        tm = InflightMetrics(False)
+        assert not tm
+
+        def bomb():
+            raise AssertionError("lazy probe evaluated with telemetry off")
+
+        tm.put("agg_norm", bomb)
+        tm.update({"loss": bomb})
+        assert tm.tree() == {}
+
+    def test_enabled_records_and_invokes_lazy(self):
+        tm = InflightMetrics(True)
+        tm.put("agg_norm", lambda: jnp.float32(3.0))
+        tm.put("loss", jnp.float32(1.5))
+        tree = tm.tree()
+        assert set(tree) == {"agg_norm", "loss"}
+        assert float(tree["agg_norm"]) == 3.0
+
+    def test_enabled_refuses_unregistered_names(self):
+        tm = InflightMetrics(True)
+        with pytest.raises(KeyError, match="unregistered"):
+            tm.put("not_in_catalogue", 1.0)
+
+
+# ================================================================= probes
+def test_bucket_dispersion_from_gram_matches_direct(key):
+    y = jax.random.normal(key, (6, 40), jnp.float32)
+    direct = probes.bucket_dispersion(y)
+    from_gram = probes.bucket_dispersion_from_gram(y @ y.T)
+    np.testing.assert_allclose(np.asarray(from_gram), np.asarray(direct),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_phase_marker_is_computation_transparent(key):
+    x = jax.random.normal(key, (8,), jnp.float32)
+
+    @jax.jit
+    def with_marker(v):
+        with phase("unit_test"):
+            return jnp.sum(v * v)
+
+    np.testing.assert_array_equal(np.asarray(with_marker(x)),
+                                  np.asarray(jax.jit(lambda v: jnp.sum(v * v))(x)))
+    # named_scope lands in the compiled program's op_name METADATA only —
+    # this is what lets coll_probe attribute collective bytes to phases
+    # without the markers ever changing the collective budget
+    assert "telemetry/unit_test" in with_marker.lower(x).compile().as_text()
+
+
+# ================================================================= events
+class TestEventLog:
+    def test_memory_log_and_all_kinds(self):
+        with EventLog(run_id="t") as log:
+            log.run_meta(script="unit")
+            log.round(0, {"agg_norm": 1.0, "byz_mask": [True, False]})
+            log.bench_row("bench", {"cell": "a"}, {"mean_us": 2.0})
+            log.probe("p", {"x": 1})
+            log.serve({"serve_queue_depth": 0})
+        kinds = [e["kind"] for e in log.events]
+        assert kinds == ["run_meta", "round", "bench_row", "probe", "serve"]
+        for e in log.events:
+            validate_event(e)  # already validated on emit; idempotent
+
+    def test_round_event_rejects_unregistered_metric(self):
+        log = EventLog()
+        with pytest.raises(ValueError, match="catalogue"):
+            log.round(0, {"made_up_metric": 1.0})
+
+    def test_numpy_values_coerced_to_json(self, tmp_path):
+        path = tmp_path / "ev.jsonl"
+        with EventLog(path, run_id="t") as log:
+            log.round(3, {"agg_norm": np.float32(2.5),
+                          "worker_weights": jnp.ones((4,), jnp.float32)})
+        events = validate_jsonl(path)
+        assert events[0]["round"] == 3
+        assert events[0]["metrics"]["worker_weights"] == [1.0] * 4
+        # every line is plain JSON (no numpy reprs survived)
+        for line in path.read_text().splitlines():
+            json.loads(line)
+
+    def test_validate_jsonl_names_offending_line(self, tmp_path):
+        path = tmp_path / "bad.jsonl"
+        good = {"kind": "probe", "t": 1.0, "name": "p", "data": {}}
+        path.write_text(json.dumps(good) + "\n" + "{not json}\n")
+        with pytest.raises(ValueError, match="bad.jsonl:2"):
+            validate_jsonl(path)
+        path.write_text(json.dumps({"kind": "nope", "t": 1.0}) + "\n")
+        with pytest.raises(ValueError, match="unknown event kind"):
+            validate_jsonl(path)
+
+
+class TestRingTimer:
+    def test_window_summary(self):
+        rt = RingTimer(capacity=4)
+        for s in (1.0, 2.0, 3.0, 4.0, 5.0):   # 1.0 falls out of the ring
+            rt.record(s)
+        s = rt.summary()
+        assert s["count"] == 4 and s["total"] == 5
+        assert s["mean_s"] == pytest.approx(3.5)
+        assert s["max_s"] == 5.0
+        assert len(rt) == 4
+
+    def test_context_manager_and_misuse(self):
+        rt = RingTimer()
+        with rt:
+            pass
+        assert len(rt) == 1 and rt.summary()["mean_s"] >= 0.0
+        with pytest.raises(RuntimeError):
+            rt.stop()
+        with pytest.raises(ValueError):
+            RingTimer(0)
+
+
+# ================================================== packed engine metrics
+EXPECTED_KEYS = {
+    "rfa": {"rfa_residual", "rfa_resid_norms", "rfa_iters"},
+    "cm": {"cm_worker_dev"},
+    "tm": {"tm_trim_frac"},
+    "cclip": {"cclip_lam", "cclip_clip_frac", "cclip_tau"},
+    "krum": {"krum_scores", "krum_selected"},
+}
+
+
+@pytest.mark.parametrize("agg", sorted(EXPECTED_KEYS))
+def test_packed_aggregate_stats_on_vs_off(key, agg):
+    """Telemetry-on output stays within fusion-level tolerance of off, the
+    rule-specific metrics + layout counters ride out, and the off-path info
+    carries no telemetry tree at all."""
+    xs = jax.random.normal(key, (12, 600), jnp.float32)
+    kwargs = {"krum": {"n_byzantine": 2}, "cclip": {"tau": 3.0},
+              "tm": {"n_trim": 2}}.get(agg, {})
+    ra = RobustAggregator.from_spec(agg, mixing="bucketing", s=2, **kwargs)
+    k = jax.random.PRNGKey(9)
+    out_off, info_off = packed_aggregate(xs, ra, key=k, block_d=256,
+                                         with_info=True)
+    assert "telemetry" not in info_off
+    out_on, info_on = packed_aggregate(xs, ra, key=k, block_d=256,
+                                       telemetry=True, with_info=True)
+    np.testing.assert_allclose(np.asarray(out_on), np.asarray(out_off),
+                               rtol=2e-6, atol=2e-6)
+    tele = info_on["telemetry"]
+    missing = EXPECTED_KEYS[agg] - set(tele)
+    assert not missing, f"{agg} telemetry missing {missing}: {sorted(tele)}"
+    assert "bucket_dispersion" in tele
+    for counter in ("sync_n_workers", "sync_n_params", "sync_n_pad",
+                    "sync_ingress_bytes", "sync_egress_bytes"):
+        assert counter in tele
+    assert int(tele["sync_n_workers"]) == 12
+    assert int(tele["sync_n_params"]) == 600
+    assert int(tele["sync_ingress_bytes"]) == 12 * int(tele["sync_n_pad"]) * 4
+    for v in tele.values():
+        assert np.all(np.isfinite(np.asarray(v, np.float32)))
+
+
+# ===================================================== attack visibility
+@pytest.fixture(scope="module")
+def alie_pool():
+    from repro.data.partition import worker_datasets
+    from repro.data.synthetic import make_train_test
+
+    X, Y, _, _ = make_train_test(jax.random.PRNGKey(0), n_train=2500,
+                                 n_test=100)
+    wx, wy = worker_datasets(X, Y, n_good=20, n_byz=5, noniid=True)
+    return jnp.asarray(wx), jnp.asarray(wy)
+
+
+def _alie_sim(agg, telemetry=True, **agg_kwargs):
+    from repro.models.mlp import nll_loss
+    from repro.training.byzantine import ByzantineSim
+
+    n, f = 25, 5
+    byz = ByzConfig(aggregator=agg, mixing="none", attack="alie",
+                    attack_kwargs=(("n", n), ("f", f)), n_byzantine=f,
+                    worker_momentum=0.9, delta=f / n, **agg_kwargs)
+    return ByzantineSim(loss_fn=nll_loss, byz=byz, n_workers=n,
+                        n_byzantine=f, lr=0.1, batch_size=32,
+                        telemetry=telemetry)
+
+
+def test_alie_visible_in_telemetry(alie_pool):
+    """The PR's headline demo: ALIE is designed to evade norm-based checks,
+    but the per-worker traces still separate Byzantine from honest — ALIE
+    rows hug the coordinatewise median abnormally tightly (low
+    cm_worker_dev) and collect abnormally LOW Krum scores."""
+    wx, wy = alie_pool
+    f = 5
+
+    from repro.models.mlp import init_mlp
+
+    sim = _alie_sim("cm")
+    _, hist = sim.run(init_mlp(jax.random.PRNGKey(1)), wx, wy, 15,
+                      jax.random.PRNGKey(2))
+    dev = hist["telemetry"]["cm_worker_dev"]       # [steps, 25]
+    assert dev.shape == (15, 25)
+    byz_mask = hist["telemetry"]["byz_mask"][0]
+    assert byz_mask[:f].all() and not byz_mask[f:].any()
+    late = dev[5:]
+    assert late[:, :f].mean() < 0.6 * late[:, f:].mean(), (
+        "ALIE workers should sit suspiciously CLOSE to the median")
+
+    sim_k = _alie_sim("krum")
+    _, hist_k = sim_k.run(init_mlp(jax.random.PRNGKey(1)), wx, wy, 15,
+                          jax.random.PRNGKey(2))
+    scores = hist_k["telemetry"]["krum_scores"]    # [steps, 25]
+    assert scores.shape == (15, 25)
+    late_s = scores[5:]
+    assert late_s[:, :f].mean() < late_s[:, f:].mean(), (
+        "ALIE workers should collect low (central) Krum scores")
+
+
+def test_telemetry_off_history_is_seed_shape(alie_pool):
+    """telemetry=False must leave the run history exactly as the seed had
+    it — no 'telemetry' key, no metric accumulation."""
+    wx, wy = alie_pool
+    from repro.models.mlp import init_mlp
+
+    sim = _alie_sim("cm", telemetry=False)
+    _, hist = sim.run(init_mlp(jax.random.PRNGKey(1)), wx, wy, 3,
+                      jax.random.PRNGKey(2))
+    assert "telemetry" not in hist
+    assert sorted(hist) == ["eval", "step", "zeta_sq"]
+
+
+# ============================================== cross-device + jit cache
+def test_cross_device_telemetry_no_retrace(alie_pool):
+    """The telemetry flag lives on static ``self``: a telemetry-on sim must
+    compile its step ONCE and reuse it every round (no per-round retrace,
+    no signature change from threading the metrics pytree out)."""
+    from repro.models.mlp import init_mlp, nll_loss
+    from repro.training.cross_device import CrossDeviceSim
+
+    wx, wy = alie_pool
+    byz = ByzConfig(aggregator="rfa", mixing="bucketing", s=2, attack="alie",
+                    attack_kwargs=(("n", 10), ("f", 2)), n_byzantine=0)
+    sim = CrossDeviceSim(loss_fn=nll_loss, byz=byz, n_clients=25,
+                         byz_frac=0.2, clients_per_round=10, lr=0.1,
+                         batch_size=16, telemetry=True)
+    before = CrossDeviceSim.step._cache_size()
+    _, hist = sim.run(init_mlp(jax.random.PRNGKey(1)), wx, wy, 4,
+                      jax.random.PRNGKey(2))
+    assert CrossDeviceSim.step._cache_size() == before + 1
+    tele = hist["telemetry"]
+    assert tele["byz_mask"].shape == (4, 10)
+    assert tele["rfa_residual"].ndim == 2 and tele["rfa_residual"].shape[0] == 4
+    for name in tele:
+        get_metric(name)  # everything in the history is catalogued
+    # rounds -> JSONL -> validator: the loop the CI smoke job exercises
+    with EventLog(run_id="unit") as log:
+        for t in range(4):
+            log.round(t, {k: v[t] for k, v in tele.items()})
+    assert len(log.events) == 4
+
+
+# ================================================================ serving
+def test_serve_engine_emits_validated_events():
+    from repro.configs import smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving import Request, ServeEngine
+
+    cfg = smoke_config("tinyllama-1.1b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    log = EventLog(run_id="serve_test")
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64, event_log=log)
+    eng.submit(Request(uid=1, prompt=[5, 17, 99], max_new_tokens=4))
+    eng.submit(Request(uid=2, prompt=[42], max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert set(done) == {1, 2}
+
+    serve_events = [e for e in log.events if e["kind"] == "serve"]
+    assert len(serve_events) == eng.steps_total > 0
+    final = eng.stats()
+    assert final["serve_tokens_total"] == 4 + 3 == eng.tokens_total
+    assert final["serve_queue_depth"] == 0 and final["serve_active_slots"] == 0
+    assert final["serve_decode_step_s"] > 0.0
+    assert final["serve_admit_latency_s"] >= 0.0
+    for name in final:
+        get_metric(name)
+    # request-level latency stamps are ordered
+    for req in done.values():
+        assert req.t_submit is not None and req.t_admit >= req.t_submit
